@@ -1,0 +1,49 @@
+"""Fig. 2: impact of (uniform) LoRA rank on accuracy / latency / energy /
+convergence — HomoLoRA at each candidate rank, plus the convergence curve."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import numpy as np
+
+from benchmarks.harness import default_sim_config, emit_csv, run_sim
+from repro.config import LoRAConfig
+
+RANKS = (2, 4, 8, 16, 32)
+
+
+def run(full: bool = False, seed: int = 0) -> List[Dict[str, Any]]:
+    rows = []
+    for rank in RANKS:
+        cfg = default_sim_config("homolora", full=full, seed=seed)
+        cfg = dataclasses.replace(
+            cfg, lora=LoRAConfig(rank=rank, max_rank=32,
+                                 candidate_ranks=(2, 4, 8, 16, 32)),
+            rounds=max(12, cfg.rounds // 2))
+        out = run_sim(cfg, verbose=False)
+        s = out["summary"]
+        h = out["history"]
+        # convergence speed: rounds to reach 80% of final accuracy
+        accs = [r["accuracy"] for r in h]
+        target = 0.8 * max(accs)
+        conv = next((i for i, a in enumerate(accs) if a >= target), len(accs))
+        rows.append({
+            "name": f"rank{rank}",
+            "acc": round(s["best_accuracy"] * 100, 1),
+            "latency_s": round(s["avg_latency"], 2),
+            "energy_j": round(s["avg_energy"], 1),
+            "rounds_to_80pct": conv,
+        })
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full=full)
+    emit_csv("fig2_rank_impact (paper Fig. 2)", rows,
+             ["acc", "latency_s", "energy_j", "rounds_to_80pct"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Figs. 9/10: scalability — cumulative reward vs fleet size and vs number
+of concurrent tasks (ours vs baselines)."""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from benchmarks.harness import default_sim_config, emit_csv, run_sim
+
+FLEETS = (6, 12, 24)
+TASKS = (1, 2, 3)
+METHODS = ("ours", "fedra", "homolora")
+
+
+def run(full: bool = False, seed: int = 0):
+    fleet_rows, task_rows = [], []
+    for method in METHODS:
+        row: Dict[str, Any] = {"name": method}
+        for v in FLEETS:
+            out = run_sim(default_sim_config(
+                method, full=full, seed=seed, num_vehicles=v,
+                rounds=18 if not full else 400), verbose=False)
+            row[f"v{v}"] = round(out["summary"]["cum_reward"], 2)
+        fleet_rows.append(row)
+        row = {"name": method}
+        for t in TASKS:
+            out = run_sim(default_sim_config(
+                method, full=full, seed=seed, num_tasks=t,
+                rounds=18 if not full else 400), verbose=False)
+            row[f"t{t}"] = round(out["summary"]["cum_reward"], 2)
+        task_rows.append(row)
+    return fleet_rows, task_rows
+
+
+def main(full: bool = False):
+    fleet_rows, task_rows = run(full=full)
+    emit_csv("fig9_fleet_scalability", fleet_rows,
+             [f"v{v}" for v in FLEETS])
+    emit_csv("fig10_task_scalability", task_rows,
+             [f"t{t}" for t in TASKS])
+    return fleet_rows, task_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Shared benchmark harness: runs the IoV simulator per method with the
+paper's experiment structure, caches results on disk (benchmarks/results/),
+and provides CSV emit helpers.
+
+Default scale is REDUCED (1-core CPU container — DESIGN.md §4); --full uses
+paper-scale settings (400 rounds, ViT-Base cost model, 30 vehicles).
+EXPERIMENTS.md records which scale produced each table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import EnergyAllocConfig, LoRAConfig
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def default_sim_config(method: str = "ours", *, full: bool = False,
+                       **overrides) -> SimConfig:
+    if full:
+        base = dict(method=method, rounds=400, num_vehicles=30, num_tasks=3,
+                    local_steps=5, batch_size=10, lr=1e-3, seed=0,
+                    energy=EnergyAllocConfig(e_total=2500.0))
+    else:
+        base = dict(method=method, rounds=44, num_vehicles=12, num_tasks=3,
+                    local_steps=2, batch_size=10, lr=5e-3, seed=0,
+                    energy=EnergyAllocConfig(e_total=900.0, warmup_q=4))
+    base.update(overrides)
+    return SimConfig(**base)
+
+
+def _key(cfg: SimConfig) -> str:
+    d = dataclasses.asdict(cfg)
+    d.pop("train_arch", None)
+    blob = json.dumps(d, sort_keys=True, default=str)
+    import hashlib
+    return hashlib.md5(blob.encode()).hexdigest()[:12]
+
+
+def run_sim(cfg: SimConfig, *, cache: bool = True, verbose: bool = True
+            ) -> Dict[str, Any]:
+    """Runs (or loads cached) simulation; returns {history, summary}."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"sim_{cfg.method}_{_key(cfg)}.json")
+    if cache and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    sim = IoVSimulator(cfg)
+    sim.run(log_every=10 if verbose else 0)
+    out = {"history": sim.history, "summary": sim.summary(),
+           "config": {"method": cfg.method, "rounds": cfg.rounds,
+                      "num_vehicles": cfg.num_vehicles,
+                      "num_tasks": cfg.num_tasks, "seed": cfg.seed},
+           "elapsed_s": round(time.time() - t0, 1)}
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def emit_csv(name: str, rows: List[Dict[str, Any]], keys: List[str]) -> None:
+    print(f"# {name}")
+    print(",".join(["name"] + keys))
+    for r in rows:
+        print(",".join([str(r.get("name", ""))]
+                       + [f"{r.get(k, '')}" for k in keys]))
+    print()
+
+
+def save_json(name: str, obj: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2)
+    return path

@@ -1,0 +1,71 @@
+"""Roofline report: renders the §Roofline table from dry-run JSONs
+(benchmarks/results/dryrun/*.json produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+from benchmarks.harness import RESULTS_DIR, emit_csv
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_results() -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, list):
+            rows.extend(data)
+        else:
+            rows.append(data)
+    return rows
+
+
+def summarize(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append({"name": f"{r.get('arch')}×{r.get('shape')}"
+                        f"×{r.get('mesh')}", "status": "FAIL"})
+            continue
+        row = {"name": f"{r['arch']}×{r['shape']}×{r['mesh']}",
+               "status": "ok",
+               "mem_gb": r.get("memory", {}).get("per_device_total_gb")}
+        rf = r.get("roofline")
+        if rf:
+            row.update({
+                "compute_ms": round(rf["compute_s"] * 1e3, 2),
+                "memory_ms": round(rf["memory_s"] * 1e3, 2),
+                "collective_ms": round(rf["collective_s"] * 1e3, 2),
+                "bottleneck": rf["bottleneck"],
+                "useful": round(rf["useful_fraction"], 3),
+            })
+        out.append(row)
+    return out
+
+
+def main(full: bool = False):
+    rows = load_results()
+    if not rows:
+        print("# roofline_report: no dry-run results found in",
+              DRYRUN_DIR)
+        print("#   run: PYTHONPATH=src python -m repro.launch.dryrun "
+              "--arch <a> --shape <s> --json "
+              "benchmarks/results/dryrun/<a>_<s>.json")
+        print()
+        return []
+    table = summarize(rows)
+    emit_csv("roofline (per arch×shape×mesh, from dry-run)", table,
+             ["status", "mem_gb", "compute_ms", "memory_ms",
+              "collective_ms", "bottleneck", "useful"])
+    ok = [t for t in table if t.get("status") == "ok"]
+    print(f"# {len(ok)}/{len(table)} combinations lowered+compiled OK")
+    print()
+    return table
+
+
+if __name__ == "__main__":
+    main()

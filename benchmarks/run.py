@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Emits CSV blocks per experiment (name,value columns) and caches simulator
+runs under benchmarks/results/. Reduced scale by default (1-core CPU);
+--full switches to paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--full", action="store_true")
+    parser.add_argument("--only", default="",
+                        help="comma-separated benchmark names")
+    args = parser.parse_args()
+
+    from benchmarks import (fig2_rank_impact, fig4_convergence, fig7_memory,
+                            fig9_10_scalability, roofline_report,
+                            table1_methods, table2_tasks, table3_ablation,
+                            theorem1_regret)
+    benches = {
+        "table1": table1_methods.main,
+        "table2": table2_tasks.main,
+        "table3": table3_ablation.main,
+        "fig2": fig2_rank_impact.main,
+        "fig4": fig4_convergence.main,
+        "fig7": fig7_memory.main,
+        "fig9_10": fig9_10_scalability.main,
+        "theorem1": theorem1_regret.main,
+        "roofline": roofline_report.main,
+    }
+    only = [b for b in args.only.split(",") if b]
+    t0 = time.time()
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t = time.time()
+        try:
+            fn(full=args.full)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# [{name}] {time.time()-t:.1f}s elapsed "
+              f"({time.time()-t0:.0f}s total)\n")
+    if failed:
+        print("# FAILED:", ",".join(failed))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

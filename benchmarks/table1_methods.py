@@ -1,0 +1,48 @@
+"""Table I: method comparison (Reward / Avg Acc / Latency / Energy / Comm)
+across HomoLoRA, HetLoRA, FedRA, Ours — same simulator, same seeds."""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from benchmarks.harness import default_sim_config, emit_csv, run_sim
+
+# "ours" = paper-faithful; "ours_residual" = + beyond-paper residual
+# (increment) aggregation — EXPERIMENTS.md §Paper
+METHODS = ("homolora", "hetlora", "fedra", "ours", "ours_residual")
+
+
+def run(full: bool = False, seeds=(0,), verbose=True) -> List[Dict[str, Any]]:
+    rows = []
+    for method in METHODS:
+        summaries = []
+        for seed in seeds:
+            cfg = default_sim_config(method, full=full, seed=seed)
+            out = run_sim(cfg, verbose=verbose)
+            summaries.append(out["summary"])
+        agg = {k: (float(np.mean([s[k] for s in summaries])),
+                   float(np.std([s[k] for s in summaries])))
+               for k in summaries[0] if k != "method"}
+        rows.append({
+            "name": method,
+            "reward": round(agg["cum_reward"][0], 2),
+            "reward_std": round(agg["cum_reward"][1], 2),
+            "avg_acc": round(agg["best_accuracy"][0] * 100, 1),
+            "latency_s": round(agg["avg_latency"][0], 1),
+            "energy_j": round(agg["avg_energy"][0], 1),
+            "comm_m": round(agg["avg_comm_params"][0] / 1e6, 2),
+        })
+    return rows
+
+
+def main(full: bool = False, seeds=(0,)):
+    rows = run(full=full, seeds=seeds)
+    emit_csv("table1_methods (paper Table I)", rows,
+             ["reward", "reward_std", "avg_acc", "latency_s", "energy_j",
+              "comm_m"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

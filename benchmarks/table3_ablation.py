@@ -1,0 +1,36 @@
+"""Table III: ablations — full framework vs w/o energy-aware scheduler vs
+w/o mobility-aware scheduling."""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from benchmarks.harness import default_sim_config, emit_csv, run_sim
+
+VARIANTS = ("ours", "ours_no_mobility", "ours_no_energy")
+
+
+def run(full: bool = False, seed: int = 0) -> List[Dict[str, Any]]:
+    rows = []
+    for v in VARIANTS:
+        out = run_sim(default_sim_config(v, full=full, seed=seed),
+                      verbose=False)
+        s = out["summary"]
+        rows.append({
+            "name": v,
+            "reward": round(s["cum_reward"], 2),
+            "avg_acc": round(s["best_accuracy"] * 100, 1),
+            "latency_s": round(s["avg_latency"], 1),
+            "energy_j": round(s["avg_energy"], 1),
+        })
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full=full)
+    emit_csv("table3_ablation (paper Table III)", rows,
+             ["reward", "avg_acc", "latency_s", "energy_j"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

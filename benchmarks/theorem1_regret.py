@@ -1,0 +1,78 @@
+"""Theorem 1 empirical check: UCB-DUAL cumulative regret grows
+O(√(M ln M)) and cumulative energy violation grows O(√M).
+
+Synthetic stationary arms (the theorem's setting): fit growth exponents of
+cumulative regret/violation in M; both must be clearly sublinear (<0.8)
+and violation ≈ 0.5."""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.harness import emit_csv
+from repro.config import UCBDualConfig
+from repro.core import ucb_dual
+
+
+def simulate(M: int, V: int = 6, seed: int = 0):
+    # Theorem 1 requires ω = Θ(1/√M); a fixed ω gives the classic
+    # primal-dual oscillation with Θ(M) one-sided violation instead.
+    cfg = UCBDualConfig(latency_ref=1.0, omega=2.0 / np.sqrt(M))
+    K = 4
+    true_r = jnp.array([0.2, 0.6, 0.9, 1.0])
+    true_e = jnp.array([1.0, 2.0, 4.0, 8.0])
+    budget = jnp.asarray(3.0 * V)
+    rng = np.random.default_rng(seed)
+    st = ucb_dual.init_state(V, K)
+    lam_hist, viol, regret = [], [], []
+    # oracle: best feasible fixed arm (avg energy ≤ 3) = arm 2 (e=4 infeas?)
+    # feasible stationary mix: the best arm with E≤3 is arm 1 (r=.6) — but
+    # a mixture of arms can do better; we use the best single feasible arm
+    # comparator per Theorem 1's fixed-action benchmark.
+    feasible = np.where(np.asarray(true_e) <= 3.0)[0]
+    r_star = float(np.max(np.asarray(true_r)[feasible]))
+    for m in range(M):
+        arms = ucb_dual.select_ranks(st, cfg, jnp.ones(V, bool))
+        r = true_r[arms] + 0.05 * jnp.asarray(rng.normal(size=V), jnp.float32)
+        e = true_e[arms]
+        st, info = ucb_dual.update(st, cfg, arms, r, e, budget)
+        viol.append(float(info["violation"]))
+        regret.append(V * r_star - float(jnp.sum(true_r[arms])))
+        lam_hist.append(float(info["lambda"]))
+    return np.cumsum(np.maximum(regret, 0.0)), np.cumsum(viol)
+
+
+def growth_exponent(xs: np.ndarray, cums: List[float]) -> float:
+    lx = np.log(np.asarray(xs, float))
+    ly = np.log(np.maximum(np.asarray(cums, float), 1e-9))
+    return float(np.polyfit(lx, ly, 1)[0])
+
+
+def run(seed: int = 0) -> List[Dict[str, Any]]:
+    Ms = (100, 200, 400, 800, 1600)
+    regs, viols = [], []
+    for M in Ms:
+        cr, cv = simulate(M, seed=seed)
+        regs.append(cr[-1])
+        viols.append(cv[-1])
+    return [{
+        "name": "ucb_dual",
+        "regret_exponent": round(growth_exponent(Ms, regs), 3),
+        "violation_exponent": round(growth_exponent(Ms, viols), 3),
+        "regret_M1600": round(regs[-1], 1),
+        "violation_M1600": round(viols[-1], 1),
+    }]
+
+
+def main(full: bool = False):
+    rows = run()
+    emit_csv("theorem1_regret (sublinear growth check)", rows,
+             ["regret_exponent", "violation_exponent", "regret_M1600",
+              "violation_M1600"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

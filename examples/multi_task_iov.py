@@ -1,0 +1,42 @@
+"""End-to-end driver: multi-task federated fine-tuning over the IoV
+simulator — the paper's full system (UCB-DUAL rank scheduling, Algorithm 1
+energy budgeting, mobility fault tolerance, truncated-SVD distribution).
+
+    PYTHONPATH=src python examples/multi_task_iov.py \
+        [--method ours|homolora|hetlora|fedra] [--rounds 40] [--vehicles 12]
+"""
+import argparse
+
+from repro.config import EnergyAllocConfig
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="ours")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--vehicles", type=int, default=12)
+    ap.add_argument("--tasks", type=int, default=3)
+    ap.add_argument("--budget", type=float, default=900.0,
+                    help="global per-round energy budget E_total (J)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    sim = IoVSimulator(SimConfig(
+        method=args.method, rounds=args.rounds, num_vehicles=args.vehicles,
+        num_tasks=args.tasks, seed=args.seed,
+        energy=EnergyAllocConfig(e_total=args.budget, warmup_q=4)))
+    sim.run(log_every=2)
+
+    s = sim.summary()
+    print("\n== summary ==")
+    for k, v in s.items():
+        print(f"  {k}: {v}")
+    last = sim.history[-1]
+    print("  final per-task:",
+          [(t['task'], round(t['accuracy'], 3), f"rank {t['mean_rank']:.1f}")
+           for t in last["tasks"]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import (load_pytree, save_pytree,  # noqa: F401
+                                 latest_checkpoint, save_round,
+                                 restore_round)

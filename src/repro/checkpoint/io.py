@@ -1,0 +1,97 @@
+"""Pytree checkpointing on npz (no orbax offline).
+
+Flattens an arbitrary pytree of arrays to path-keyed npz entries; structure
+is recorded as a JSON skeleton so load restores the exact tree (dicts, lists,
+tuples, NamedTuple-free). Used for federated round state (global adapters,
+bandit statistics, budgets) and training state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> Tuple[Dict[str, np.ndarray], Any]:
+    """Returns (leaves dict, skeleton). Skeleton mirrors the tree with leaf
+    positions replaced by the flat key string."""
+    if isinstance(tree, dict):
+        leaves, skel = {}, {}
+        for k in sorted(tree):
+            sub_l, sub_s = _flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
+            leaves.update(sub_l)
+            skel[k] = sub_s
+        return leaves, skel
+    if isinstance(tree, (list, tuple)):
+        leaves, skel = {}, []
+        for i, v in enumerate(tree):
+            sub_l, sub_s = _flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i))
+            leaves.update(sub_l)
+            skel.append(sub_s)
+        return leaves, {"__list__": skel,
+                        "__tuple__": isinstance(tree, tuple)}
+    if tree is None:
+        return {}, {"__none__": True}
+    arr = np.asarray(tree)
+    return {prefix: arr}, {"__leaf__": prefix,
+                           "__dtype__": str(arr.dtype)}
+
+
+def _unflatten(skel: Any, leaves: Dict[str, np.ndarray]) -> Any:
+    if isinstance(skel, dict):
+        if skel.get("__none__"):
+            return None
+        if "__leaf__" in skel:
+            arr = leaves[skel["__leaf__"]]
+            return jnp.asarray(arr)
+        if "__list__" in skel:
+            items = [_unflatten(s, leaves) for s in skel["__list__"]]
+            return tuple(items) if skel.get("__tuple__") else items
+        return {k: _unflatten(v, leaves) for k, v in skel.items()}
+    raise ValueError(f"bad skeleton node {skel!r}")
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    leaves, skel = _flatten(jax.device_get(tree))
+    np.savez_compressed(path, __skeleton__=json.dumps(skel),
+                        **{k: v for k, v in leaves.items()})
+
+
+def load_pytree(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        skel = json.loads(str(z["__skeleton__"]))
+        leaves = {k: z[k] for k in z.files if k != "__skeleton__"}
+    return _unflatten(skel, leaves)
+
+
+def save_round(ckpt_dir: str, round_idx: int, state: Any) -> str:
+    path = os.path.join(ckpt_dir, f"round_{round_idx:06d}.npz")
+    save_pytree(path, state)
+    return path
+
+
+def restore_round(ckpt_dir: str, round_idx: Optional[int] = None) -> Tuple[int, Any]:
+    if round_idx is None:
+        path = latest_checkpoint(ckpt_dir)
+        if path is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        round_idx = int(re.search(r"round_(\d+)", path).group(1))
+    else:
+        path = os.path.join(ckpt_dir, f"round_{round_idx:06d}.npz")
+    return round_idx, load_pytree(path)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cands = sorted(f for f in os.listdir(ckpt_dir)
+                   if re.fullmatch(r"round_\d+\.npz", f))
+    return os.path.join(ckpt_dir, cands[-1]) if cands else None

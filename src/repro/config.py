@@ -1,0 +1,333 @@
+"""Configuration system for the repro framework.
+
+Dataclass-based configs (no external deps) with a registry keyed by ``--arch``
+ids. A :class:`ModelConfig` fully describes one of the assigned architectures;
+:class:`InputShape` describes one of the assigned input shapes;
+:class:`FedConfig` / :class:`ScheduleConfig` configure the paper's federated
+fine-tuning and rank-scheduling machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/transformer.py
+BLOCK_ATTN = "attn"          # full (GQA/MQA) attention + MLP
+BLOCK_MLA = "mla"            # DeepSeek-style multi-head latent attention + MLP/MoE
+BLOCK_MAMBA2 = "mamba2"      # Mamba2 (SSD) block
+BLOCK_RWKV6 = "rwkv6"        # RWKV6 time-mix + channel-mix
+BLOCK_SHARED_ATTN = "shared_attn"  # Zamba2 shared transformer block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared_experts: int = 0
+    expert_d_ff: Optional[int] = None    # if None, use model d_ff
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) configuration."""
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64     # rank of the data-dependent decay MLP (w_lora)
+    gate_lora: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | vlm | ssm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attn-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    # positional / norm / activation details
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    activation: str = "swiglu"       # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0
+    # block layout: list of block kinds, len == num_layers (or pattern)
+    block_pattern: Optional[Tuple[str, ...]] = None   # None -> all BLOCK_ATTN
+    shared_attn_every: int = 0       # zamba2: shared attn applied every k mamba blocks
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # modality frontends (stubbed per spec)
+    frontend: Optional[str] = None   # None | "vision" | "audio"
+    num_prefix_embeds: int = 0       # e.g. 256 SigLIP patch embeddings
+    # attention windowing (None => full causal). Used for long-context decode.
+    sliding_window: Optional[int] = None
+    # citation
+    source: str = ""
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        assert self.num_heads > 0
+        return self.d_model // self.num_heads
+
+    def blocks(self) -> Tuple[str, ...]:
+        if self.block_pattern is not None:
+            assert len(self.block_pattern) == self.num_layers, (
+                f"{self.name}: block pattern len {len(self.block_pattern)} != "
+                f"num_layers {self.num_layers}")
+            return self.block_pattern
+        return tuple([BLOCK_ATTN] * self.num_layers)
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (used for roofline MODEL_FLOPS = 6·N·D) ----
+    def param_counts(self) -> Dict[str, float]:
+        """Approximate parameter counts: total and active-per-token."""
+        d, f = self.d_model, self.d_ff
+        hd = self.resolved_head_dim if self.num_heads > 0 else 0
+        nq, nkv = self.num_heads, self.num_kv_heads
+        glu = self.activation in ("swiglu", "geglu")
+        per_mlp = d * f * (3 if glu else 2)
+        counts = {"embed": self.d_model * self.vocab_size *
+                  (1 if self.tie_embeddings else 2)}
+        total = active = 0.0
+        for kind in self.blocks():
+            if kind == BLOCK_ATTN or kind == BLOCK_SHARED_ATTN:
+                attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+                blk = attn + per_mlp
+                total += blk; active += blk
+            elif kind == BLOCK_MLA:
+                m = self.mla
+                attn = (d * m.kv_lora_rank                       # kv down
+                        + m.kv_lora_rank * nq * (m.qk_nope_head_dim + m.v_head_dim)
+                        + d * m.qk_rope_head_dim                  # shared rope k
+                        + d * nq * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                        + nq * m.v_head_dim * d)
+                if self.moe is not None:
+                    ef = self.moe.expert_d_ff or f
+                    routed = self.moe.num_experts * d * ef * (3 if glu else 2)
+                    shared = self.moe.num_shared_experts * d * ef * (3 if glu else 2)
+                    router = d * self.moe.num_experts
+                    total += attn + routed + shared + router
+                    active += (attn + shared + router +
+                               self.moe.top_k * d * ef * (3 if glu else 2))
+                else:
+                    total += attn + per_mlp; active += attn + per_mlp
+            elif kind == BLOCK_MAMBA2:
+                s = self.ssm
+                d_in = s.expand * d
+                # in_proj: d -> 2*d_in + 2*state + heads ; out_proj: d_in -> d
+                nheads = d_in // s.head_dim
+                blk = d * (2 * d_in + 2 * s.state_dim + nheads) + d_in * d
+                total += blk; active += blk
+            elif kind == BLOCK_RWKV6:
+                r = self.rwkv
+                tm = d * d * 4 + d * r.gate_lora * 2 + d * r.decay_lora * 2
+                cm = d * int(3.5 * d) * 2 if f == 0 else d * f * 2
+                total += tm + cm; active += tm + cm
+            else:
+                raise ValueError(kind)
+            if kind == BLOCK_ATTN and self.moe is not None:
+                # MoE replaces the dense MLP (grok-style): undo + add experts
+                total -= per_mlp; active -= per_mlp
+                ef = self.moe.expert_d_ff or f
+                e_p = d * ef * (3 if glu else 2)
+                total += self.moe.num_experts * e_p + d * self.moe.num_experts
+                active += self.moe.top_k * e_p + d * self.moe.num_experts
+        counts["blocks_total"] = total
+        counts["blocks_active"] = active
+        counts["total"] = total + counts["embed"]
+        counts["active"] = active + counts["embed"]
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# LoRA / federated / scheduling configs (the paper)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 8                      # current rank (per-client, adaptive)
+    max_rank: int = 64                 # η_max: server-side truncated-SVD depth
+    alpha: float = 16.0                # scaling: s = alpha / rank
+    candidate_ranks: Tuple[int, ...] = (2, 4, 8, 16, 32, 64)   # φ_η
+    # which linear layers get adapters
+    target_attn: bool = True
+    target_mlp: bool = True
+    dropout: float = 0.0
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / max(self.rank, 1)
+
+
+@dataclass(frozen=True)
+class UCBDualConfig:
+    """Algorithm 2 (UCB-DUAL) hyper-parameters — paper §V-A values."""
+    alpha: float = 0.5        # latency weight in reward
+    gamma: float = 2.0        # accuracy weight in reward
+    epsilon: float = 1.4142135623730951   # exploration factor √2
+    omega: float = 0.05       # dual learning rate
+    lambda_init: float = 0.0
+    # reward latency normalization τ/τ_ref (the paper's reward magnitudes
+    # (~1/round) imply normalized latency; its α=0.5 with raw 50–80 s
+    # latencies would make rewards hugely negative — EXPERIMENTS.md §Paper)
+    latency_ref: float = 60.0
+
+
+@dataclass(frozen=True)
+class EnergyAllocConfig:
+    """Algorithm 1 (inter-task budget allocation) hyper-parameters."""
+    e_total: float = 4000.0   # global per-round energy budget (J)
+    warmup_q: int = 6         # reallocation period Q
+    xi: float = 0.7           # EMA smoothing ξ
+    zeta: float = 1.5         # difficulty amplification ζ > 1
+    task_cap_frac: float = 0.7
+
+
+@dataclass(frozen=True)
+class MobilityConfig:
+    beta: float = 1.0          # energy weight in fallback costs
+    accuracy_threshold: float = 0.6   # q*_v
+    migration_latency: float = 2.0    # τ^mig baseline (s)
+    migration_energy: float = 30.0    # e^mig baseline (J)
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    num_tasks: int = 3
+    vehicles_per_task: int = 10
+    rounds: int = 400
+    local_steps: int = 5
+    batch_size: int = 10
+    lr: float = 1e-5
+    seed: int = 0
+    lora: LoRAConfig = field(default_factory=LoRAConfig)
+    ucb: UCBDualConfig = field(default_factory=UCBDualConfig)
+    energy: EnergyAllocConfig = field(default_factory=EnergyAllocConfig)
+    mobility: MobilityConfig = field(default_factory=MobilityConfig)
+
+
+# ---------------------------------------------------------------------------
+# Mesh / launch
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # single pod: (data=16, model=16) = 256 chips; multi-pod adds pod=2
+    data: int = 16
+    model: int = 16
+    pods: int = 2
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.multi_pod else (
+            self.data, self.model)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def num_chips(self) -> int:
+        n = self.data * self.model
+        return n * self.pods if self.multi_pod else n
+
+
+# TPU v5e hardware constants (roofline)
+@dataclass(frozen=True)
+class HardwareConfig:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    vmem_bytes: int = 128 * 1024 * 1024
+
+
+HW_V5E = HardwareConfig()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(arch_id: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+    return deco
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates registry)
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def get_input_shape(name: str) -> InputShape:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown input shape {name!r}; have {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]

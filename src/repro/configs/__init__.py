@@ -1,0 +1,32 @@
+"""Architecture registry: importing this package populates repro.config._REGISTRY.
+
+Each ``<arch>.py`` defines the exact assigned configuration (with source
+citation) plus a ``reduced()`` smoke-test variant (≤2 layers, d_model ≤ 512,
+≤4 experts) of the same family.
+"""
+from repro.configs import (  # noqa: F401
+    smollm_135m,
+    starcoder2_15b,
+    deepseek_v2_236b,
+    zamba2_2_7b,
+    paligemma_3b,
+    qwen2_0_5b,
+    grok1_314b,
+    gemma_7b,
+    musicgen_medium,
+    rwkv6_7b,
+    vit_base_paper,
+)
+
+ASSIGNED_ARCHS = (
+    "smollm-135m",
+    "starcoder2-15b",
+    "deepseek-v2-236b",
+    "zamba2-2.7b",
+    "paligemma-3b",
+    "qwen2-0.5b",
+    "grok-1-314b",
+    "gemma-7b",
+    "musicgen-medium",
+    "rwkv6-7b",
+)

@@ -1,0 +1,10 @@
+"""Core: the paper's primary contribution.
+
+- lora.py          adaptive-rank LoRA adapters
+- svd.py           truncated (randomized) SVD — TPU/MXU-friendly
+- aggregation.py   rank-heterogeneous federated aggregation (+ baselines')
+- ucb_dual.py      Algorithm 2: UCB-DUAL constrained bandit rank selection
+- energy_alloc.py  Algorithm 1: inter-task energy budget allocation
+- mobility.py      §IV-E mobility-aware fault-tolerant scheduling
+- cost_model.py    §III-C four-stage latency/energy model
+"""

@@ -1,0 +1,241 @@
+"""Federated aggregation of heterogeneous-rank LoRA updates (paper §III-B)
+plus the baselines' aggregation rules (HetLoRA zero-padding, FedRA masks).
+
+All operations act on *per-linear* adapter trees: pytrees whose leaves are
+{"a": (..., d_in, r_v), "b": (..., r_v, d_out)} with client-dependent r_v.
+The server-side global adapter is kept as merged deltas Δθ (d_in, d_out)
+per target linear — that is what gets SVD'd and redistributed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.core.svd import randomized_svd
+
+
+def tree_paths(tree: Any) -> List[Tuple]:
+    """Paths to adapter dicts (nodes holding 'a' and 'b')."""
+    paths = []
+
+    def rec(node, path):
+        if isinstance(node, dict) and "a" in node and "b" in node:
+            paths.append(tuple(path))
+            return
+        if isinstance(node, dict):
+            for k2, v in node.items():
+                rec(v, path + [k2])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, path + [i])
+    rec(tree, [])
+    return paths
+
+
+def tree_get(tree, path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def tree_set(tree, path, value):
+    """Pure functional set (shallow-copies along the path)."""
+    if not path:
+        return value
+    if isinstance(tree, dict):
+        out = dict(tree)
+    else:
+        out = list(tree)
+    out[path[0]] = tree_set(tree[path[0]], path[1:], value)
+    return out if isinstance(tree, dict) else type(tree)(out)
+
+
+# ---------------------------------------------------------------------------
+# Ours: merged-delta weighted aggregation + truncated-SVD redistribution
+# ---------------------------------------------------------------------------
+
+def aggregate_merged(client_adapters: Sequence[Any], weights: Sequence[float],
+                     scale: float) -> Any:
+    """Δθ̂ = Σ_v (|D_v|/|D|)·B̂_v·Â_v per adapter (paper Eq. in §III-B).
+
+    Clients may have different ranks; merging to full deltas first makes
+    aggregation rank-agnostic (no zero-padding artifacts — the advantage the
+    paper claims over HetLoRA).
+    Returns a tree of merged deltas with the same structure.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    paths = tree_paths(client_adapters[0])
+    out = client_adapters[0]
+    for path in paths:
+        delta = None
+        for ci, ad_tree in enumerate(client_adapters):
+            ad = tree_get(ad_tree, path)
+            d = lora_lib.merge_delta(
+                {"a": ad["a"].astype(jnp.float32),
+                 "b": ad["b"].astype(jnp.float32)}, scale) * w[ci]
+            delta = d if delta is None else delta + d
+        out = tree_set(out, path, {"delta": delta})
+    return out
+
+
+def redistribute(merged: Any, rank: int, scale: float, max_rank: int,
+                 seed: int = 0, balanced: bool = False) -> Any:
+    """Paper Fig. 3: truncated SVD of each Δθ, personalized rank-η factors.
+
+    Returns an adapter tree at `rank` for one client. The SVD is computed to
+    max_rank once; truncation to each client's rank is free (slicing), which
+    is how the RSU amortizes one SVD across all vehicles.
+    balanced: √Σ split between factors — hypothesis REFUTED, kept for the
+    ablation record (see lora.factors_from_svd and EXPERIMENTS.md §Paper).
+    """
+    paths = tree_paths_delta(merged)
+    out = merged
+    for path in paths:
+        delta = tree_get(merged, path)["delta"]
+        # stacked layer axes: delta may be (L, d1, d2) or (L, E, d1, d2)
+        lead = delta.shape[:-2]
+        d1, d2 = delta.shape[-2:]
+        flat = delta.reshape((-1, d1, d2))
+        mr = min(max_rank, d1, d2)
+        us, ss, vts = jax.vmap(
+            lambda m: randomized_svd(m, mr, seed=seed))(flat)
+        u = us.reshape(lead + (d1, mr))
+        s = ss.reshape(lead + (mr,))
+        vt = vts.reshape(lead + (mr, d2))
+        if balanced:
+            root = jnp.sqrt(jnp.maximum(s[..., :rank], 0.0) / scale)
+            a = u[..., :, :rank] * root[..., None, :]
+            b = root[..., :, None] * vt[..., :rank, :]
+        else:
+            a = (u[..., :, :rank] * s[..., None, :rank]) / scale
+            b = vt[..., :rank, :]
+        out = tree_set(out, path, {"a": a, "b": b})
+    return out
+
+
+def tree_paths_delta(tree: Any) -> List[Tuple]:
+    paths = []
+
+    def rec(node, path):
+        if isinstance(node, dict) and "delta" in node:
+            paths.append(tuple(path))
+            return
+        if isinstance(node, dict):
+            for k2, v in node.items():
+                rec(v, path + [k2])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, path + [i])
+    rec(tree, [])
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# HetLoRA (Cho et al., 2024): zero-padding aggregation + self-pruning
+# ---------------------------------------------------------------------------
+
+def aggregate_hetlora(client_adapters: Sequence[Any],
+                      weights: Sequence[float], max_rank: int) -> Any:
+    """Zero-pad every client's (a, b) to max_rank and average factor-wise.
+
+    This is the baseline's known weakness: averaging factors (not products)
+    introduces cross-terms; padding wastes capacity. Returns an adapter tree
+    at max_rank.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    paths = tree_paths(client_adapters[0])
+    out = client_adapters[0]
+    for path in paths:
+        acc_a = acc_b = None
+        for ci, tree in enumerate(client_adapters):
+            ad = tree_get(tree, path)
+            r = ad["a"].shape[-1]
+            pad_a = [(0, 0)] * (ad["a"].ndim - 1) + [(0, max_rank - r)]
+            pad_b = ([(0, 0)] * (ad["b"].ndim - 2)
+                     + [(0, max_rank - r)] + [(0, 0)])
+            a = jnp.pad(ad["a"].astype(jnp.float32), pad_a) * w[ci]
+            b = jnp.pad(ad["b"].astype(jnp.float32), pad_b) * w[ci]
+            acc_a = a if acc_a is None else acc_a + a
+            acc_b = b if acc_b is None else acc_b + b
+        out = tree_set(out, path, {"a": acc_a, "b": acc_b})
+    return out
+
+
+def hetlora_truncate(adapters: Any, rank: int) -> Any:
+    """Client-side: slice the global max-rank adapter down to local rank
+    (HetLoRA's distribution rule)."""
+    def cut(ad):
+        return {"a": ad["a"][..., :rank], "b": ad["b"][..., :rank, :]}
+    paths = tree_paths(adapters)
+    out = adapters
+    for path in paths:
+        out = tree_set(out, path, cut(tree_get(out, path)))
+    return out
+
+
+def hetlora_prune_rank(adapters: Any, gamma: float = 0.99) -> int:
+    """Gradient-free self-pruning: smallest r keeping `gamma` of the squared
+    Frobenius mass of the stacked factor columns (HetLoRA §3.3 flavour)."""
+    norms = None
+    for path in tree_paths(adapters):
+        ad = tree_get(adapters, path)
+        col = jnp.sum(jnp.square(ad["a"].astype(jnp.float32)),
+                      axis=tuple(range(ad["a"].ndim - 1)))
+        col = col + jnp.sum(jnp.square(ad["b"].astype(jnp.float32)),
+                            axis=tuple(i for i in range(ad["b"].ndim)
+                                       if i != ad["b"].ndim - 2))
+        norms = col if norms is None else norms + col
+    c = jnp.cumsum(norms) / jnp.maximum(jnp.sum(norms), 1e-12)
+    return int(jnp.searchsorted(c, gamma) + 1)
+
+
+# ---------------------------------------------------------------------------
+# FedRA (Su et al., 2024): random layer allocation
+# ---------------------------------------------------------------------------
+
+def fedra_layer_mask(key, num_layers: int, fraction: float) -> jnp.ndarray:
+    """Random subset of layers each client trains this round."""
+    n_active = max(1, int(round(fraction * num_layers)))
+    perm = jax.random.permutation(key, num_layers)
+    mask = jnp.zeros((num_layers,), jnp.float32).at[perm[:n_active]].set(1.0)
+    return mask
+
+
+def apply_layer_mask(adapter_updates: Any, base_adapters: Any,
+                     mask: jnp.ndarray) -> Any:
+    """Keep updates only on active layers (leading layer axis of each leaf)."""
+    def mix(new, old):
+        m = mask.reshape((mask.shape[0],) + (1,) * (new.ndim - 1))
+        return new * m + old * (1 - m)
+    return jax.tree_util.tree_map(mix, adapter_updates, base_adapters)
+
+
+def aggregate_fedra(client_adapters: Sequence[Any], weights: Sequence[float],
+                    masks: Sequence[jnp.ndarray]) -> Any:
+    """Per-layer weighted average over the clients that trained that layer."""
+    paths = tree_paths(client_adapters[0])
+    out = client_adapters[0]
+    w = jnp.asarray(weights, jnp.float32)
+    for path in paths:
+        num_a = num_b = None
+        den = None
+        for ci, tree in enumerate(client_adapters):
+            ad = tree_get(tree, path)
+            m = masks[ci]
+            mm = m.reshape((m.shape[0],) + (1,) * (ad["a"].ndim - 1))
+            wa = ad["a"].astype(jnp.float32) * mm * w[ci]
+            wb = ad["b"].astype(jnp.float32) * mm * w[ci]
+            d = m * w[ci]
+            num_a = wa if num_a is None else num_a + wa
+            num_b = wb if num_b is None else num_b + wb
+            den = d if den is None else den + d
+        den = jnp.maximum(den, 1e-12)
+        da = den.reshape((den.shape[0],) + (1,) * (num_a.ndim - 1))
+        out = tree_set(out, path, {"a": num_a / da, "b": num_b / da})
+    return out

@@ -1,0 +1,93 @@
+"""Adaptive-rank LoRA adapters (paper §III-B).
+
+An adapter for a linear `W: (d_in, d_out)` is a pair
+``{"a": (d_in, r), "b": (r, d_out)}`` applied as
+``y = x @ W + scale · (x @ a) @ b`` with ``scale = alpha / r``.
+
+The paper's server-side redistribution works on the *merged* update
+``Δθ = scale · aᵀ·b`` — see :func:`merge_delta`, :func:`factors_from_svd`.
+
+Adapters for scanned layer stacks carry a leading layer axis: (L, d_in, r).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LoRAConfig
+
+Adapter = Dict[str, jnp.ndarray]
+
+
+def init_adapter(key, d_in: int, d_out: int, rank: int,
+                 dtype=jnp.float32, layers: Optional[int] = None) -> Adapter:
+    """Kaiming-init A, zero-init B (standard LoRA init: Δθ starts at 0)."""
+    sa = (d_in, rank) if layers is None else (layers, d_in, rank)
+    sb = (rank, d_out) if layers is None else (layers, rank, d_out)
+    a = jax.random.normal(key, sa) / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return {"a": a.astype(dtype), "b": jnp.zeros(sb, dtype)}
+
+
+def apply_lora_linear(base: Dict[str, jnp.ndarray], adapter: Optional[Adapter],
+                      x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """y = x·W (+bias) + scale·(x·A)·B.  adapter=None → plain linear."""
+    y = x @ base["w"]
+    if "b" in base:
+        y = y + base["b"]
+    if adapter is not None:
+        # adapters are kept in f32 (they are trained); compute the low-rank
+        # path in f32 and cast back to the base compute dtype
+        lo = (x.astype(adapter["a"].dtype) @ adapter["a"]) @ adapter["b"]
+        y = y + (scale * lo).astype(y.dtype)
+    return y
+
+
+def merge_delta(adapter: Adapter, scale: float) -> jnp.ndarray:
+    """Δθ = scale · A·B, shape (d_in, d_out) (or (L, d_in, d_out))."""
+    return scale * (adapter["a"] @ adapter["b"])
+
+
+def factors_from_svd(u: jnp.ndarray, s: jnp.ndarray, vt: jnp.ndarray,
+                     rank: int, scale: float, balanced: bool = False
+                     ) -> Adapter:
+    """Truncated-SVD factors for client redistribution.
+
+    Default is the paper's literal split (Fig. 3): B_v = UΣ, A_v = Vᵀ.
+    We hypothesized a *balanced* √Σ split would condition gradients better —
+    REFUTED empirically (EXPERIMENTS.md §Paper): with Σ≈0 early in training
+    the balanced split zeroes BOTH factors (no gradient signal at all),
+    while the paper's split keeps b = Vᵀ at unit row norm so ∂L/∂a stays
+    healthy — the same asymmetry as standard LoRA init. balanced=True kept
+    for the ablation record.
+    """
+    if balanced:
+        root = jnp.sqrt(jnp.maximum(s[:rank], 0.0) / scale)
+        a = u[:, :rank] * root[None, :]
+        b = root[:, None] * vt[:rank, :]
+    else:
+        a = (u[:, :rank] * s[:rank][None, :]) / scale
+        b = vt[:rank, :]
+    return {"a": a, "b": b}
+
+
+def adapter_num_params(d_in: int, d_out: int, rank: int) -> int:
+    return rank * (d_in + d_out)
+
+
+def tree_rank(adapters: Any) -> int:
+    """Rank of an adapter tree (all adapters share the client's rank).
+
+    Every adapter dict holds {"a": (..., d_in, r), "b": (..., r, d_out)};
+    the 'a' leaf's last axis is the rank.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(adapters)[0]
+    for path, leaf in flat:
+        if any(getattr(k, "key", None) == "a" for k in path):
+            return int(leaf.shape[-1])
+    raise ValueError("no adapter 'a' leaf found")
+
+
+def count_params(adapters: Any) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(adapters))

@@ -1,0 +1,57 @@
+"""Truncated SVD via randomized subspace iteration — TPU/MXU-native.
+
+The RSU computes a rank-η_max truncated SVD of the aggregated adapter
+Δθ ∈ R^{d1×d2} once per round (paper §III-B "Computational Overhead
+Analysis": O(d1·d2·η_max)). LAPACK-style bidiagonalization is serial and
+hostile to the MXU; randomized subspace iteration (Halko, Martinsson &
+Tropp 2011) is GEMM-dominated:
+
+    Ω ~ N(0,1)^{d2×(η+p)};  Y = (A Aᵀ)^q A Ω;  Q = qr(Y);
+    B = Qᵀ A;  svd(B) (tiny);  U = Q·Ub.
+
+With q=2 power iterations the top-η singular subspace is accurate to well
+below LoRA-training noise (validated in tests against jnp.linalg.svd).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "oversample", "iters"))
+def randomized_svd(a: jnp.ndarray, rank: int, *, oversample: int = 8,
+                   iters: int = 2, seed: int = 0
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Truncated SVD of a (d1, d2) matrix. Returns (U (d1,r), s (r,), Vt (r,d2))."""
+    d1, d2 = a.shape
+    r = min(rank + oversample, min(d1, d2))
+    key = jax.random.PRNGKey(seed)
+    af = a.astype(jnp.float32)
+    omega = jax.random.normal(key, (d2, r), jnp.float32)
+    y = af @ omega                                     # (d1, r)
+    q, _ = jnp.linalg.qr(y)
+    for _ in range(iters):
+        z = af.T @ q                                   # (d2, r)
+        z, _ = jnp.linalg.qr(z)
+        y = af @ z
+        q, _ = jnp.linalg.qr(y)
+    b = q.T @ af                                       # (r, d2)
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+def exact_svd(a: jnp.ndarray, rank: int):
+    """Oracle for tests: LAPACK SVD truncated to `rank`."""
+    u, s, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+def truncation_energy(s: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """Fraction of squared singular mass retained at `rank` (paper's
+    'Feasibility of SVD Truncation' argument, used in diagnostics)."""
+    tot = jnp.sum(jnp.square(s))
+    return jnp.sum(jnp.square(s[:rank])) / jnp.maximum(tot, 1e-12)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import TaskSpec, make_task, DEFAULT_TASKS  # noqa: F401
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.pipeline import ClientDataset  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.federated.client import LocalTrainer  # noqa: F401
+from repro.federated.server import RSUServer  # noqa: F401
+from repro.federated.baselines import METHODS  # noqa: F401

@@ -1,0 +1,105 @@
+"""Vehicle-side local fine-tuning: Adam on the LoRA adapter pytree only
+(frozen base), jit-cached per adapter rank (§V-A: 5 local steps, Adam,
+lr 1e-5 — configurable; our reduced sims use a larger lr for tractable
+convergence horizons, recorded in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.data.pipeline import ClientDataset
+from repro.models import transformer as T
+from repro.optim import adam, apply_updates
+
+
+class LocalTrainer:
+    """Compiles one train step per (rank,) and reuses it across vehicles and
+    rounds — ranks come from the small candidate set φ_η, so at most
+    |φ_η| compilations."""
+
+    def __init__(self, cfg: ModelConfig, lora: LoRAConfig, lr: float = 1e-3):
+        self.cfg = cfg
+        self.lora = lora
+        self.lr = lr
+        self._steps: Dict[int, Any] = {}
+        self._evals: Dict[int, Any] = {}
+        self.opt = adam(lr)
+
+    def _train_step(self, rank: int):
+        if rank not in self._steps:
+            cfg, lora, opt = self.cfg, self.lora, self.opt
+            lora_r = self._lora_at(rank)
+
+            @jax.jit
+            def step(params, adapters, opt_state, batch, layer_mask):
+                def loss(ad):
+                    return T.loss_fn(params, ad, cfg, lora_r, batch)
+                (l, metrics), grads = jax.value_and_grad(
+                    loss, has_aux=True)(adapters)
+                # FedRA: only the allocated layers train this round
+                grads = jax.tree_util.tree_map(
+                    lambda g: g * layer_mask.reshape(
+                        (-1,) + (1,) * (g.ndim - 1)), grads)
+                updates, opt_state = opt.update(grads, opt_state, adapters)
+                adapters = apply_updates(adapters, updates)
+                return adapters, opt_state, metrics
+
+            self._steps[rank] = step
+        return self._steps[rank]
+
+    def _eval_fn(self, rank: int):
+        if rank not in self._evals:
+            cfg, lora_r = self.cfg, self._lora_at(rank)
+
+            @jax.jit
+            def ev(params, adapters, batch):
+                _, metrics = T.loss_fn(params, adapters, cfg, lora_r, batch)
+                return metrics
+
+            self._evals[rank] = ev
+        return self._evals[rank]
+
+    def _lora_at(self, rank: int) -> LoRAConfig:
+        import dataclasses
+        return dataclasses.replace(self.lora, rank=rank)
+
+    def finetune(self, params, adapters, dataset: ClientDataset,
+                 steps: int, eval_batch: Optional[Dict] = None,
+                 layer_mask: Optional[np.ndarray] = None
+                 ) -> Tuple[Any, Dict[str, float]]:
+        """Runs `steps` local updates; returns (new_adapters, metrics).
+        layer_mask: (L,) multipliers — FedRA trains only its allocated
+        layers."""
+        from repro.core.lora import tree_rank
+        rank = tree_rank(adapters)
+        step = self._train_step(rank)
+        opt_state = self.opt.init(adapters)
+        if layer_mask is None:
+            layer_mask = jnp.ones((self.cfg.num_layers,), jnp.float32)
+        else:
+            layer_mask = jnp.asarray(layer_mask, jnp.float32)
+        last = {}
+        for _ in range(steps):
+            batch = dataset.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            adapters, opt_state, metrics = step(params, adapters, opt_state,
+                                                batch, layer_mask)
+            last = metrics
+        out = {k: float(v) for k, v in last.items()}
+        if eval_batch is not None:
+            ev = self._eval_fn(rank)
+            m = ev(params, adapters,
+                   {k: jnp.asarray(v) for k, v in eval_batch.items()})
+            out["eval_accuracy"] = float(m["accuracy"])
+        return adapters, out
+
+    def evaluate(self, params, adapters, batch: Dict) -> Dict[str, float]:
+        from repro.core.lora import tree_rank
+        ev = self._eval_fn(tree_rank(adapters))
+        m = ev(params, adapters, {k: jnp.asarray(v) for k, v in batch.items()})
+        return {k: float(v) for k, v in m.items()}

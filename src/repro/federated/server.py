@@ -1,0 +1,168 @@
+"""RSU-side server: per-method global adapter state, distribution and
+aggregation.
+
+Ours (paper §III-B): the server state is the merged global delta tree
+Δθ per LoRA target; distribution ships personalized truncated-SVD factors
+at each vehicle's chosen rank; aggregation is the data-weighted sum of
+client B̂·Â products. HomoLoRA / HetLoRA / FedRA implement the baselines'
+rules from §V-A.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.core import aggregation as agg
+from repro.core import lora as lora_lib
+from repro.models import transformer as T
+
+
+class RSUServer:
+    def __init__(self, cfg: ModelConfig, lora: LoRAConfig, method: str,
+                 seed: int = 0, residual: bool = False):
+        """residual: beyond-paper aggregation — accumulate client
+        *increments* (B̂Â − B⁰A⁰) onto the retained global Δθ instead of
+        replacing it with the weighted product average. The paper's replace
+        rule collapses the global adapter to the span of one round's client
+        ranks; residual aggregation preserves previously learned directions
+        (EXPERIMENTS.md §Paper records both)."""
+        assert method in ("ours", "homolora", "hetlora", "fedra")
+        self.cfg = cfg
+        self.lora = lora
+        self.method = method
+        self.residual = residual
+        self.key = jax.random.PRNGKey(seed)
+        self.round = 0
+        # method-specific global state
+        self.merged = None            # ours: tree of {"delta"}
+        self.global_adapters = None   # baselines: adapter tree
+        self.fedra_fraction = 0.6
+        self._masks: List[np.ndarray] = []
+        self._distributed: List[Any] = []
+
+    # ------------------------------------------------------------------
+    def _fresh(self, rank: int):
+        self.key, k = jax.random.split(self.key)
+        return T.init_adapters(k, self.cfg, self.lora, rank=rank)
+
+    def distribute(self, ranks: Sequence[int]) -> List[Any]:
+        """One adapter tree per participating vehicle."""
+        if self.method == "ours":
+            if self.merged is None:
+                out = [self._fresh(r) for r in ranks]
+            else:
+                uniq = {}
+                for r in set(ranks):
+                    uniq[r] = agg.redistribute(self.merged, rank=r,
+                                               scale=self.lora.scale,
+                                               max_rank=self.lora.max_rank,
+                                               seed=self.round)
+                out = [uniq[r] for r in ranks]
+            self._distributed = out
+            return out
+        if self.method == "homolora":
+            if self.global_adapters is None:
+                self.global_adapters = self._fresh(self.lora.rank)
+            return [self.global_adapters for _ in ranks]
+        if self.method == "hetlora":
+            if self.global_adapters is None:
+                self.global_adapters = self._fresh(self.lora.max_rank)
+            return [agg.hetlora_truncate(self.global_adapters, r)
+                    for r in ranks]
+        if self.method == "fedra":
+            if self.global_adapters is None:
+                self.global_adapters = self._fresh(self.lora.rank)
+            self._masks = []
+            out = []
+            for _ in ranks:
+                self.key, k = jax.random.split(self.key)
+                mask = agg.fedra_layer_mask(k, self.cfg.num_layers,
+                                            self.fedra_fraction)
+                self._masks.append(mask)
+                out.append(self.global_adapters)
+            return out
+        raise ValueError(self.method)
+
+    @property
+    def masks(self):
+        return self._masks
+
+    # ------------------------------------------------------------------
+    def aggregate(self, client_adapters: Sequence[Any],
+                  weights: Sequence[float],
+                  masks: Optional[Sequence] = None,
+                  indices: Optional[Sequence[int]] = None) -> None:
+        """masks: FedRA layer masks for the *kept* clients (aligned with
+        client_adapters — departures may drop some distributed clients).
+        indices: positions of the kept clients within the distributed list
+        (needed by residual aggregation)."""
+        if masks is not None:
+            self._masks = list(masks)
+        if not client_adapters:
+            self.round += 1
+            return
+        if self.method == "ours":
+            new_merged = agg.aggregate_merged(client_adapters, weights,
+                                              self.lora.scale)
+            if self.residual and self.merged is not None and indices:
+                base = [self._distributed[i] for i in indices]
+                old_part = agg.aggregate_merged(base, weights,
+                                                self.lora.scale)
+                self.merged = jax.tree_util.tree_map(
+                    lambda g, n, o: g + (n - o), self.merged,
+                    new_merged, old_part)
+            else:
+                self.merged = new_merged
+        elif self.method == "homolora":
+            w = np.asarray(weights, np.float64)
+            w = w / w.sum()
+            self.global_adapters = jax.tree_util.tree_map(
+                lambda *xs: sum(float(wi) * x for wi, x in zip(w, xs)),
+                *client_adapters)
+        elif self.method == "hetlora":
+            self.global_adapters = agg.aggregate_hetlora(
+                client_adapters, weights, self.lora.max_rank)
+        elif self.method == "fedra":
+            masked = []
+            for ad, mask in zip(client_adapters, self._masks):
+                masked.append(self._mask_tree(ad, mask))
+            self.global_adapters = agg.aggregate_fedra(
+                client_adapters, weights,
+                [self._seg_masks(m) for m in self._masks])
+        self.round += 1
+
+    def _seg_masks(self, mask: np.ndarray) -> jnp.ndarray:
+        # our sim models are single-segment; general case splits by segment
+        return jnp.asarray(mask)
+
+    def _mask_tree(self, ad, mask):
+        return ad
+
+    # ------------------------------------------------------------------
+    def eval_adapters(self) -> Optional[Any]:
+        """Global adapter view for server-side evaluation."""
+        if self.method == "ours":
+            if self.merged is None:
+                return None
+            return agg.redistribute(self.merged, rank=self.lora.max_rank,
+                                    scale=self.lora.scale,
+                                    max_rank=self.lora.max_rank)
+        return self.global_adapters
+
+    def comm_params_per_round(self, ranks: Sequence[int]) -> int:
+        """Uplink parameter volume (Table I "Comm." column)."""
+        from repro.core.cost_model import (adapter_payload_params,
+                                           target_dims_of)
+        dims = target_dims_of(self.cfg, self.lora)
+        if self.method == "fedra":
+            return int(sum(adapter_payload_params(dims, self.lora.rank)
+                           * self.fedra_fraction for _ in ranks))
+        if self.method == "homolora":
+            return sum(adapter_payload_params(dims, self.lora.rank)
+                       for _ in ranks)
+        return sum(adapter_payload_params(dims, r) for r in ranks)

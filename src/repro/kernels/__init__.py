@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage ships:
+  kernel.py - pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    - jit'd public wrapper (shape plumbing, defaults)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+Kernels are validated on CPU with interpret=True; models use the jnp
+reference paths by default and opt into kernels with use_pallas=True.
+"""

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for blockwise flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  sliding_window: Optional[int] = None,
+                  sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). Returns (B, H, Sq, D).
+
+    Dense softmax attention with GQA head-group broadcast — the oracle the
+    Pallas kernel must match.
+    """
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    rep = H // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * sm_scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # q aligned to the end of k
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window is not None:
+        mask &= kpos > qpos - sliding_window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Fused base+adapter GEMM: y = x·W + scale·t·B with t = x·A precomputed.
+
+Why fused (DESIGN.md §6): during LoRA fine-tuning every targeted linear
+evaluates base GEMM *plus* adapter path. Done naively that is a second
+read of the activations from HBM and a materialized (M, N) adapter product.
+Here the adapter contribution is added into the same VMEM accumulator tile
+as the base GEMM's k-loop epilogue — one output write, no extra HBM round
+trip. t = x·A is O(M·K·r), r ≤ 64 ≪ N, computed once by the wrapper (its
+cost is ~r/N of the base GEMM).
+
+Tiling: grid (M/bm, N/bn, K/bk), k innermost/sequential, f32 VMEM scratch
+accumulator of (bm, bn); all tile dims 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lora_mm_kernel(x_ref, w_ref, t_ref, b_ref, o_ref, acc_scr, *,
+                    scale: float, nk: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        t = t_ref[...].astype(jnp.float32)       # (bm, r)
+        bb = b_ref[...].astype(jnp.float32)      # (r, bn)
+        adapter = jax.lax.dot_general(
+            t, bb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_scr[...] + scale * adapter).astype(o_ref.dtype)
+
+
+def lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray,
+                       b: jnp.ndarray, *, scale: float,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 512,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x:(M,K) w:(K,N) t=(x·A):(M,r) b:(r,N) → (M,N)."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = t.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nm, nn, nk = M // bm, N // bn, K // bk
+
+    kernel = functools.partial(_lora_mm_kernel, scale=scale, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, r), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, t, b)

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper: flattens batch dims, computes t = x·A, pads to
+tile multiples, and calls the fused Pallas GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_matmul.kernel import lora_matmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "block_m", "block_n", "block_k", "interpret"))
+def lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, *, scale: float = 1.0,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                interpret: bool = False) -> jnp.ndarray:
+    """y = x·W + scale·(x·A)·B with x: (..., K), w: (K, N), a: (K, r),
+    b: (r, N). Returns (..., N)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    xf = x.reshape(-1, K)
+    M = xf.shape[0]
+    t = (xf @ a).astype(xf.dtype)                  # (M, r) — r/N of base cost
+
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(xf, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    tp = jnp.pad(t, ((0, pm), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, pn)))
+    out = lora_matmul_kernel(xp, wp, tp, bp, scale=scale, block_m=bm,
+                             block_n=bn, block_k=bk, interpret=interpret)
+    return out[:M, :N].reshape(lead + (N,))

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused LoRA linear."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """y = x·W + scale·(x·A)·B.  x:(M,K) w:(K,N) a:(K,r) b:(r,N)."""
+    return (x @ w + scale * ((x @ a) @ b)).astype(x.dtype)

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the chunked WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = 128, interpret: bool = False
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Models' layout: r,k,v,logw (B, S, H, K); u (H, K).
+    Returns (y (B,S,H,K), final state (B,H,K,K))."""
+    B, S, H, K = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    args = [t.transpose(0, 2, 1, 3) for t in (r, k, v, logw)]
+    if pad:
+        # pad with k=0 (no state writes) and logw=0 (no decay) steps
+        args = [jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in args]
+    y, sfin = wkv6_kernel(*args, u, chunk=c, interpret=interpret)
+    return y[:, :, :S, :].transpose(0, 2, 1, 3), sfin

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the WKV6 recurrence — literal per-step scan.
+
+    S_t = diag(w_t)·S_{t-1} + k_t·v_tᵀ
+    y_t = r_tᵀ·(S_{t-1} + diag(u)·k_t·v_tᵀ)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             logw: jnp.ndarray, u: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,logw: (B, S, H, K); u: (H, K). Returns (y (B,S,H,K),
+    final state (B,H,K,K))."""
+    B, S, H, K = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, ..., None] * kv)
+        state = state * jnp.exp(wt)[..., None] + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for t in (r, k, v, logw))
+    init = jnp.zeros((B, H, K, K), jnp.float32)
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,127 @@
+"""Serving step factories: prefill (full-sequence forward) and decode
+(single-token with KV/state caches). Decode is what the `decode_32k` and
+`long_500k` input shapes lower (one new token against a seq_len cache;
+sub-quadratic archs use constant-size state, full-attention archs use the
+sliding-window variant for long_500k — DESIGN.md §5).
+
+CLI example (batched requests on CPU with the reduced config):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tokens 32
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.launch import sharding as sh
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: ModelConfig, lora: LoRAConfig, mesh, *,
+                      seq_shard: bool = True, sliding_window=None,
+                      scan_unroll: int = 1):
+    constrain = sh.make_constrain(mesh, seq_shard)
+
+    def prefill(params, adapters, batch):
+        logits, _ = T.forward(params, adapters, cfg, lora, batch,
+                              sliding_window=sliding_window,
+                              constrain=constrain, scan_unroll=scan_unroll)
+        return logits
+
+    def jit_prefill(params, adapters, batch):
+        ps = sh.tree_shardings(mesh, params)
+        ads = (sh.tree_shardings(mesh, adapters, is_adapter=True)
+               if adapters is not None else None)
+        bs = sh.batch_shardings(mesh, batch)
+        dp = sh._dp_for(mesh, batch["tokens"].shape[0])
+        out_sh = NamedSharding(mesh, P(dp, None, "model"))
+        return jax.jit(prefill, in_shardings=(ps, ads, bs),
+                       out_shardings=out_sh)
+
+    return prefill, jit_prefill
+
+
+def make_decode_step(cfg: ModelConfig, lora: LoRAConfig, mesh, *,
+                     sliding_window=None, donate: bool = True,
+                     scan_unroll: int = 1):
+    def decode(params, adapters, token, caches, position):
+        logits, new_caches = T.decode_step(
+            params, adapters, cfg, lora, token, caches, position,
+            sliding_window=sliding_window, scan_unroll=scan_unroll)
+        return logits, new_caches
+
+    def jit_decode(params, adapters, token, caches, position):
+        ps = sh.tree_shardings(mesh, params)
+        ads = (sh.tree_shardings(mesh, adapters, is_adapter=True)
+               if adapters is not None else None)
+        cs = sh.cache_shardings(mesh, caches)
+        dp = sh._dp_for(mesh, token.shape[0])
+        tok_sh = NamedSharding(mesh, P(dp, None))
+        pos_sh = NamedSharding(mesh, P())
+        out_sh = (NamedSharding(mesh, P(dp, None, "model")), cs)
+        return jax.jit(decode,
+                       in_shardings=(ps, ads, tok_sh, cs, pos_sh),
+                       out_shardings=out_sh,
+                       donate_argnums=(3,) if donate else ())
+
+    return decode, jit_decode
+
+
+# ---------------------------------------------------------------------------
+# CPU demo CLI: batched request serving with the reduced config
+# ---------------------------------------------------------------------------
+
+def main():
+    import argparse
+    import importlib
+    import time
+
+    import numpy as np
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", default="qwen2-0.5b")
+    parser.add_argument("--batch", type=int, default=4)
+    parser.add_argument("--prompt-len", type=int, default=16)
+    parser.add_argument("--tokens", type=int, default=32)
+    args = parser.parse_args()
+
+    mod = importlib.import_module(
+        "repro.configs." + args.arch.replace("-", "_").replace(".", "_"))
+    cfg = mod.reduced()
+    lora = LoRAConfig(rank=4)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+
+    B = args.batch
+    clen = args.prompt_len + args.tokens
+    caches = T.init_caches(cfg, B, clen, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
+
+    decode = jax.jit(functools.partial(T.decode_step, cfg=cfg, lora=lora))
+
+    # prefill via repeated decode (simple reference path on CPU)
+    t0 = time.time()
+    tok = jnp.asarray(prompt[:, :1], jnp.int32)
+    outs = []
+    for pos in range(clen - 1):
+        logits, caches = T.decode_step(params, None, cfg, lora, tok, caches,
+                                       jnp.asarray(pos, jnp.int32))
+        if pos + 1 < args.prompt_len:
+            tok = jnp.asarray(prompt[:, pos + 1:pos + 2], jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+    gen = np.stack(outs, 1)
+    print(f"served {B} requests × {gen.shape[1]} tokens in {dt:.1f}s "
+          f"({B * gen.shape[1] / dt:.1f} tok/s)")
+    print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

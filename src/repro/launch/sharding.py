@@ -1,0 +1,276 @@
+"""Partition rules: parameter/activation PartitionSpecs per leaf path.
+
+Scheme (Megatron-style TP over `model`, DP over `pod`×`data`):
+  - attention qkv / MLP up|gate: columns (out features) over `model`
+  - attention o / MLP down: rows (in features) over `model`
+  - MoE experts: expert axis over `model` (expert parallel)
+  - embeddings / lm_head: vocab over `model` (sharded logits)
+  - norms, scalars, small low-rank factors: replicated
+  - LoRA adapters: replicated (they are tiny: η·(d1+d2)); per-expert
+    adapters follow the expert sharding
+  - batch: over (`pod`, `data`); optional Megatron-SP sequence sharding of
+    the residual stream over `model` inside the layer scan
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# path → spec rules
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# (regex over path, spec builder given leaf ndim). Specs are written for the
+# UNSTACKED 2-D weight; leading stacked axes (layers, experts) are padded
+# with None on the left, except expert weights which pin the expert axis.
+_COL = "col"        # shard last axis over model
+_ROW = "row"        # shard second-to-last axis over model
+_EXPERT = "expert"  # shard expert axis (position -3 of w, -4 of stacked)
+_VOCAB_IN = "vocab_in"   # (V, d) → shard V
+_REPL = "repl"
+
+_RULES: Tuple[Tuple[str, str], ...] = (
+    (r"embed$", _VOCAB_IN),
+    (r"lm_head/w$", _COL),
+    # attention
+    (r"attn/(q|k|v)/(w|b)$", _COL),
+    (r"attn/o/w$", _ROW),
+    # MLA: latent down-projections replicated (small), up/q sharded on heads
+    (r"mla/(kv_down|q_down)/w$", _REPL),
+    (r"mla/(kv_up|q_up|q)/w$", _COL),
+    (r"mla/o/w$", _ROW),
+    # dense MLP
+    (r"mlp/(up|gate)/w$", _COL),
+    (r"mlp/down/w$", _ROW),
+    # MoE
+    (r"moe/router/w$", _REPL),
+    (r"moe/w_(up|gate|down)$", _EXPERT),
+    (r"moe/shared/(up|gate)/w$", _COL),
+    (r"moe/shared/down/w$", _ROW),
+    # mamba2: shard the fused in-proj columns and out-proj rows
+    (r"mamba/in_proj/w$", _COL),
+    (r"mamba/out_proj/w$", _ROW),
+    (r"mamba/(conv_w|conv_b|a_log|d_skip|dt_bias)$", _REPL),
+    # rwkv6
+    (r"rwkv/w_(r|k|v)/w$", _COL),
+    (r"rwkv/w_o/w$", _ROW),
+    (r"rwkv/ck/w$", _COL),
+    (r"rwkv/cv/w$", _ROW),
+    (r"rwkv/cr/w$", _COL),
+    (r"rwkv/(gate_a|gate_b|decay_a|decay_b|mu_.*|w0|u_bonus)$", _REPL),
+    # norms and everything else small
+    (r".*", _REPL),
+)
+
+
+def _rule_for(path_s: str) -> str:
+    for pat, rule in _RULES:
+        if re.search(pat, path_s):
+            return rule
+    return _REPL
+
+
+def param_spec(path, leaf, *, is_adapter: bool = False,
+               model_size: int = 16) -> P:
+    path_s = _path_str(path)
+    nd = leaf.ndim
+    if is_adapter:
+        # per-expert adapters (L, E, d, r)/(L, E, r, d): shard expert axis
+        if (nd == 4 and re.search(r"moe/w_(up|gate|down)", path_s)
+                and leaf.shape[1] % model_size == 0):
+            return P(None, "model", None, None)
+        return P()  # adapters are tiny — replicate
+    rule = _rule_for(path_s)
+    if rule == _REPL:
+        return P()
+    if rule == _VOCAB_IN:
+        return P(*([None] * (nd - 2) + ["model", None]))
+    if rule == _COL:
+        if nd == 1:   # stacked bias (d,) — can't tell; replicate
+            return P()
+        if re.search(r"/b$", path_s):      # stacked bias (L, dout)
+            return P(*([None] * (nd - 1) + ["model"]))
+        return P(*([None] * (nd - 1) + ["model"]))
+    if rule == _ROW:
+        return P(*([None] * (nd - 2) + ["model", None]))
+    if rule == _EXPERT:
+        # (L, E, d, f) or (E, d, f). Expert weights are the memory giants
+        # (DeepSeek 453 GB, grok 400 GB): 16-way model parallel alone leaves
+        # ~28 GB/device, so they are additionally FSDP-sharded over `data`.
+        # They are FROZEN under LoRA fine-tuning — the data-axis shard costs
+        # one all-gather per layer and no gradient traffic (§Perf iter 2).
+        # E % model == 0 → expert-parallel (E over model, ff over data);
+        # else (grok E=8) → ff over model, d over data.
+        if leaf.shape[-3] % model_size == 0:
+            if re.search(r"w_down$", path_s):   # (E, f, d)
+                return P(*([None] * (nd - 3) + ["model", "data", None]))
+            return P(*([None] * (nd - 3) + ["model", None, "data"]))
+        if re.search(r"w_down$", path_s):       # (E, f, d)
+            return P(*([None] * (nd - 3) + [None, "model", "data"]))
+        return P(*([None] * (nd - 3) + [None, "data", "model"]))
+    raise ValueError(rule)
+
+
+def tree_shardings(mesh: Mesh, tree: Any, *, is_adapter: bool = False):
+    """NamedSharding pytree matching `tree` (arrays or ShapeDtypeStructs)."""
+    msize = mesh.shape["model"]
+
+    def f(path, leaf):
+        spec = param_spec(path, leaf, is_adapter=is_adapter,
+                          model_size=msize)
+        # drop shardings that do not divide the leaf evenly (safety net for
+        # small reduced configs; production dims are 128-aligned)
+        dims = leaf.shape
+        ok = True
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            sz = mesh.shape[ax] if isinstance(ax, str) else 1
+            if i < len(dims) and dims[i] % sz != 0:
+                ok = False
+        return NamedSharding(mesh, spec if ok else P())
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _dp_for(mesh: Mesh, batch_size: int):
+    """Largest prefix of the dp axes that divides `batch_size` (long_500k has
+    global_batch=1 — the batch axis cannot shard, data parallelism is idle
+    and the cache seq axis is sharded instead, see cache_spec)."""
+    axes = []
+    n = 1
+    for a in batch_axes(mesh):
+        if batch_size % (n * mesh.shape[a]) == 0:
+            axes.append(a)
+            n *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_size: int) -> P:
+    dp = _dp_for(mesh, batch_size)
+    return P(*((dp,) + (None,) * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, batch_spec(mesh, leaf.ndim, leaf.shape[0])),
+        batch_tree)
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """KV caches: (L, B, S, Hkv, hd) — batch over dp axes, heads over model
+    when divisible (else head_dim, else replicate). SSM states:
+    (L, B, H, P, N) — batch over dp, heads over model when divisible.
+
+    When the batch itself is too small for the dp axes (long_500k B=1), the
+    cache *sequence* axis takes the dp sharding instead — context-parallel
+    cache residency."""
+    path_s = _path_str(path)
+    nd = leaf.ndim
+    msize = mesh.shape["model"]
+    dpsz = _dp_size(mesh)
+
+    def batch_or_none(b):
+        return _dp_for(mesh, b)
+
+    if nd >= 4:
+        # heads axis heuristics: axis -2 for kv caches (L,B,S,H,hd);
+        # axis -3 for ssm states (L,B,H,P,N); wkv (L,B,H,K,V)
+        if re.search(r"(^|/)(k|v)$", path_s):
+            b, s, h, hd = leaf.shape[-4], leaf.shape[-3], leaf.shape[-2], \
+                leaf.shape[-1]
+            dp = batch_or_none(b)
+            seq_axes = []
+            seq_div = 1
+            if dp is None and s % dpsz == 0:
+                seq_axes += list(batch_axes(mesh))   # B too small: seq takes dp
+                seq_div *= dpsz
+            if h % msize == 0:          # shard kv heads
+                tail = ["model", None]
+            elif s % (seq_div * msize) == 0:
+                # heads don't divide (GQA/MQA small-kv): context-parallel —
+                # shard the cache SEQ over `model`; decode attention reduces
+                # with tiny softmax-stat psums instead of all-gathering the
+                # cache every layer (§Perf iter 7)
+                seq_axes.append("model")
+                tail = [None, None]
+            elif hd % msize == 0:       # last resort: head_dim (psum)
+                tail = [None, "model"]
+            else:
+                tail = [None, None]
+            seq = tuple(seq_axes) if seq_axes else None
+            spec = [None, dp, seq] + tail
+            return P(*(spec[-nd:] if nd == 5 else spec[1:]))
+        if re.search(r"(ssm|wkv)$", path_s):
+            b, h = leaf.shape[-4], leaf.shape[-3]
+            dp = batch_or_none(b)
+            spec = [None, dp, "model" if h % msize == 0 else None, None,
+                    None]
+            return P(*(spec[-nd:] if nd == 5 else spec[1:]))
+    if re.search(r"(c_kv|k_rope|pos)$", path_s):  # (L,B,S,·) / (L,B,S)
+        b = leaf.shape[1] if nd >= 3 else leaf.shape[0]
+        s = leaf.shape[2] if nd >= 3 else None
+        dp = batch_or_none(b)
+        seq = None
+        if dp is None and s is not None and s % dpsz == 0:
+            seq = batch_axes(mesh)
+        spec = [None, dp, seq] + [None] * (nd - 3)
+        return P(*spec[:nd]) if nd >= 3 else P(*([None] * nd))
+    # conv tails, token-shift states: batch over dp (axis 1 when stacked)
+    if nd >= 2:
+        dp = batch_or_none(leaf.shape[1])
+        return P(*([None, dp] + [None] * (nd - 2)))
+    return P()
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(p, l, mesh)), cache_tree)
+
+
+def make_constrain(mesh: Mesh, seq_shard: bool):
+    """Residual-stream constraint fn for forward(constrain=...).
+
+    seq_shard=True: Megatron-SP — (B, S, d) sharded (dp, model, None);
+    the partitioner inserts all-gathers around attention/MLP and
+    reduce-scatters after, cutting saved-activation memory by the TP degree.
+    """
+    dp = batch_axes(mesh)
+    spec = P(dp, "model", None) if seq_shard else P(dp, None, None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain

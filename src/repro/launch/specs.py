@@ -1,0 +1,67 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. The dry-run lowers
+against these; nothing is materialized.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import InputShape, ModelConfig, get_input_shape
+
+# long-context window for full-attention archs at long_500k (DESIGN.md §5)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def has_attention_cache(cfg: ModelConfig) -> bool:
+    from repro.config import BLOCK_ATTN, BLOCK_MLA
+    kinds = set(cfg.blocks())
+    return bool(kinds & {BLOCK_ATTN, BLOCK_MLA}) or bool(cfg.shared_attn_every)
+
+
+def needs_window(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decode on archs with attention caches → sliding window."""
+    return (shape.name == "long_500k" and has_attention_cache(cfg))
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if needs_window(cfg, shape):
+        return LONG_CONTEXT_WINDOW
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Returns kwargs for the step function being lowered.
+
+    train/prefill: batch={"tokens","labels"[, "prefix_embeds"]}
+    decode:        token, caches, position
+    """
+    B, S = shape.global_batch, shape.seq_len
+    npref = cfg.num_prefix_embeds if cfg.frontend else 0
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        s_txt = S - npref
+        assert s_txt > 0
+        batch["tokens"] = sds((B, s_txt), jnp.int32)
+        if npref:
+            batch["prefix_embeds"] = sds((B, npref, cfg.d_model), dtype)
+        if shape.mode == "train":
+            batch["labels"] = sds((B, s_txt), jnp.int32)
+        return {"batch": batch}
+    # decode
+    from repro.models import transformer as T
+    clen = cache_len_for(cfg, shape)
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, clen, dtype=dtype))
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "caches": caches,
+        "position": sds((), jnp.int32),
+    }

@@ -1,0 +1,191 @@
+"""Distributed train step factory + training driver.
+
+The unit of work is the paper-faithful federated local step: LoRA
+fine-tuning of the adapter pytree over a frozen base (DESIGN.md §3), run
+under pjit on the production mesh. Gradients reduce over (`pod`, `data`);
+tensor/expert parallelism over `model`.
+
+Also usable as a CLI for the end-to-end example:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 200
+(CPU: uses the reduced config unless --full.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.launch import sharding as sh
+from repro.models import transformer as T
+from repro.optim import adam, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, lora: LoRAConfig, mesh, *,
+                    lr: float = 1e-4, remat: bool = True,
+                    seq_shard: bool = True, sliding_window=None,
+                    donate: bool = True, scan_unroll: int = 1,
+                    ce_chunk: int = 0, microbatch: int = 1):
+    """Returns (step_fn, shardings dict). step(params, adapters, opt_state,
+    batch) -> (adapters, opt_state, metrics). Differentiates adapters only.
+    microbatch > 1: gradient accumulation — splits the global batch into
+    `microbatch` sequential slices (activation memory ∝ 1/microbatch at
+    identical math; §Perf iter 6)."""
+    opt = adam(lr)
+    constrain = sh.make_constrain(mesh, seq_shard)
+
+    def loss_of(params, ad, batch):
+        return T.loss_fn(params, ad, cfg, lora, batch, remat=remat,
+                         constrain=constrain, scan_unroll=scan_unroll,
+                         ce_chunk=ce_chunk)
+
+    def step(params, adapters, opt_state, batch):
+        if microbatch > 1:
+            def resplit(t):
+                return t.reshape((microbatch, t.shape[0] // microbatch)
+                                 + t.shape[1:])
+            mb = jax.tree_util.tree_map(resplit, batch)
+
+            def body(carry, b):
+                g_acc, m_acc = carry
+                (_, metrics), grads = jax.value_and_grad(
+                    lambda ad: loss_of(params, ad, b), has_aux=True
+                )(adapters)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
+                m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), adapters)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32),
+                  "accuracy": jnp.zeros((), jnp.float32)}
+            from repro.models import runmode
+            (grads, metrics), _ = jax.lax.scan(
+                body, (g0, m0), mb,
+                unroll=runmode.inner_unroll(microbatch))
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatch,
+                                             metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda ad: loss_of(params, ad, batch), has_aux=True
+            )(adapters)
+        updates, opt_state = opt.update(grads, opt_state, adapters)
+        adapters = apply_updates(adapters, updates)
+        return adapters, opt_state, metrics
+
+    def shardings_for(params, adapters, opt_state, batch):
+        from repro.optim.adam import AdamState
+        ps = sh.tree_shardings(mesh, params)
+        ads = sh.tree_shardings(mesh, adapters, is_adapter=True)
+        os_ = AdamState(
+            step=NamedSharding(mesh, P()),
+            mu=sh.tree_shardings(mesh, opt_state.mu, is_adapter=True),
+            nu=sh.tree_shardings(mesh, opt_state.nu, is_adapter=True))
+        bs = sh.batch_shardings(mesh, batch)
+        return ps, ads, os_, bs
+
+    def jit_step(params, adapters, opt_state, batch):
+        """Returns the jitted step with explicit in/out shardings, given
+        abstract (or concrete) arguments."""
+        ps, ads, os_, bs = shardings_for(params, adapters, opt_state, batch)
+        metrics_sh = {k: NamedSharding(mesh, P())
+                      for k in ("loss", "aux", "accuracy")}
+        return jax.jit(
+            step,
+            in_shardings=(ps, ads, os_, bs),
+            out_shardings=(ads, os_, metrics_sh),
+            donate_argnums=(1, 2) if donate else ())
+
+    return step, jit_step
+
+
+def abstract_state(cfg: ModelConfig, lora: LoRAConfig, *, rank: int,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytrees for params/adapters/opt_state (no alloc)."""
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg, dtype=dtype), key)
+    adapters = jax.eval_shape(
+        functools.partial(T.init_adapters, cfg=cfg, lora=lora,
+                          dtype=jnp.float32, rank=rank), key)
+    opt = adam(1e-4)
+    opt_state = jax.eval_shape(opt.init, adapters)
+    return params, adapters, opt_state
+
+
+# ---------------------------------------------------------------------------
+# CLI driver (end-to-end example entry point)
+# ---------------------------------------------------------------------------
+
+def main():
+    import argparse
+    import time
+
+    import numpy as np
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", default="smollm-135m")
+    parser.add_argument("--steps", type=int, default=50)
+    parser.add_argument("--batch", type=int, default=8)
+    parser.add_argument("--seq", type=int, default=64)
+    parser.add_argument("--rank", type=int, default=8)
+    parser.add_argument("--lr", type=float, default=1e-3)
+    parser.add_argument("--full", action="store_true",
+                        help="use the full (not reduced) config")
+    args = parser.parse_args()
+
+    if args.full:
+        from repro.config import get_arch
+        cfg = get_arch(args.arch)
+    else:
+        import importlib
+        mod = importlib.import_module(
+            "repro.configs." + args.arch.replace("-", "_").replace(".", "_"))
+        cfg = mod.reduced()
+    lora = LoRAConfig(rank=args.rank)
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    adapters = T.init_adapters(key, cfg, lora, rank=args.rank)
+    opt = adam(args.lr)
+    opt_state = opt.init(adapters)
+
+    @jax.jit
+    def step(params, adapters, opt_state, batch):
+        def loss(ad):
+            return T.loss_fn(params, ad, cfg, lora, batch)
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(adapters)
+        updates, opt_state = opt.update(grads, opt_state, adapters)
+        return apply_updates(adapters, updates), opt_state, metrics
+
+    rng = np.random.default_rng(0)
+    # tiny synthetic LM task: predict tok_{t+1} = (tok_t * 7 + 1) mod V
+    V = cfg.vocab_size
+    t0 = time.time()
+    for i in range(args.steps):
+        first = rng.integers(0, V, size=(args.batch, 1))
+        seq = [first]
+        for _ in range(args.seq):
+            seq.append((seq[-1] * 7 + 1) % V)
+        toks = np.concatenate(seq, 1)
+        batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        if cfg.num_prefix_embeds:
+            batch["prefix_embeds"] = jnp.zeros(
+                (args.batch, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+        adapters, opt_state, m = step(params, adapters, opt_state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['accuracy']):.3f} "
+                  f"({time.time()-t0:.1f}s)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

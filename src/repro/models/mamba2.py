@@ -1,0 +1,189 @@
+"""Mamba2 (SSD) block — chunked state-space dual form (arXiv:2405.21060).
+
+TPU adaptation: the chunked SSD form turns the recurrence into dense
+(MXU-friendly) intra-chunk einsums plus an O(S/chunk) inter-chunk scan —
+this is the GPU paper's block decomposition re-expressed as GEMMs, which is
+exactly what the MXU wants. Single B/C group (shared across heads).
+
+Decode keeps a constant-size state: ssm (B, H, P, N) + conv tail
+(B, W-1, conv_channels) — the substrate for `long_500k` sub-quadratic decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.core.lora import apply_lora_linear
+from repro.models.common import fan_in_init
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return s, d_in, nheads, conv_ch
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32,
+                layers: Optional[int] = None) -> Dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    L = () if layers is None else (layers,)
+    proj_out = 2 * d_in + 2 * s.state_dim + nheads   # z, x, B, C, dt
+    p = {
+        "in_proj": {"w": fan_in_init(ks[0], L + (d, proj_out), dtype)},
+        "conv_w": (0.1 * jax.random.normal(ks[1], L + (s.conv_width, conv_ch))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros(L + (conv_ch,), dtype),
+        "a_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, nheads)), L + (nheads,)
+        ).astype(dtype),
+        "d_skip": jnp.ones(L + (nheads,), dtype),
+        "dt_bias": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nheads))), L + (nheads,)
+        ).astype(dtype),
+        "out_proj": {"w": fan_in_init(ks[2], L + (d_in, d), dtype)},
+    }
+    return p
+
+
+def _segsum(a):
+    """log-space segment sums: out[..., i, j] = sum_{s=j+1..i} a[..., s].
+
+    a: (..., Q). Returns (..., Q, Q) lower-triangular (−inf above diag).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a_log, B, C, chunk: int):
+    """Chunked SSD. x: (b,S,H,P); dt: (b,S,H); B,C: (b,S,N).
+
+    Returns y (b,S,H,P) and final state (b,H,P,N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    dtf = dt.astype(jnp.float32)
+    da = dtf * A[None, None, :]                              # (b,S,H) log-decay
+    xb = (x * dtf[..., None]).astype(jnp.float32)            # fold dt into x
+
+    def rs(t, width):
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, dac = rs(xb, P), rs(da, 0)
+    Bc, Cc = rs(B.astype(jnp.float32), 0), rs(C.astype(jnp.float32), 0)
+
+    # intra-chunk (diagonal blocks): y_intra[t] = Σ_{j<=t} exp(seg) C_t·B_j x_j
+    Ld = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))         # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)           # (b,nc,Q,Q)
+    y_intra = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                         scores, Ld, xc)
+
+    # chunk-final states: S_c = Σ_j exp(Σ_{s>j} da) B_j x_j
+    cum = jnp.cumsum(dac, axis=2)                            # (b,nc,Q,H)
+    tail = cum[:, :, -1:, :] - cum                           # decay j→chunk end
+    st = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                    Bc, jnp.exp(tail), xc)                   # (b,nc,H,P,N)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,H)
+
+    def scan_fn(prev, inp):
+        st_c, dec_c = inp
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    from repro.models import runmode
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (st.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=runmode.inner_unroll(nc))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,H,P,N)
+
+    # inter-chunk contribution: y_off[t] = exp(cum[t]) C_t · S_prev
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       Cc, jnp.exp(cum.transpose(0, 1, 2, 3)), prev_states)
+    y = (y_intra + y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def _causal_conv(xBC, w, bias, conv_state=None):
+    """Depthwise causal conv. xBC: (b,S,C); w: (W,C)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + bias[None, None, :]), new_state
+
+
+def apply_mamba2(p, adapters, x, cfg: ModelConfig, lora_scale: float,
+                 state=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (b,S,d). state: {"ssm": (b,H,P,N), "conv": (b,W-1,C)} for decode.
+
+    LoRA targets in_proj/out_proj (§DESIGN Arch-applicability).
+    """
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    b, S, d = x.shape
+    ad = adapters or {}
+    zxbcdt = apply_lora_linear(p["in_proj"], ad.get("in_proj"), x, lora_scale)
+    z, xr, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.state_dim,
+                 2 * d_in + 2 * s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    xBC = jnp.concatenate([xr, B, C], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xr, B, C = jnp.split(xBC, [d_in, d_in + s.state_dim], axis=-1)
+    xh = xr.reshape(b, S, nheads, s.head_dim)
+
+    if state is None:
+        if S % s.chunk == 0 and S >= s.chunk:
+            y, final = _ssd_chunked(xh, dt, p["a_log"], B, C, s.chunk)
+        else:
+            y, final = _ssd_chunked(xh, dt, p["a_log"], B, C, S)
+        new_state = None if state is None else {"ssm": final, "conv": new_conv}
+    else:
+        # single-step decode: S == 1
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))
+        da = jnp.exp(dt[:, 0] * A[None, :])                   # (b,H)
+        xb = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+        newS = (state["ssm"] * da[..., None, None]
+                + jnp.einsum("bn,bhp->bhpn", B[:, 0].astype(jnp.float32), xb))
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), newS)
+        y = y[:, None]                                        # (b,1,H,P)
+        new_state = {"ssm": newS, "conv": new_conv}
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = (y.reshape(b, S, d_in) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(x.dtype)
+    out = apply_lora_linear(p["out_proj"], ad.get("out_proj"), y, lora_scale)
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }

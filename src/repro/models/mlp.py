@@ -1,0 +1,34 @@
+"""MLP blocks: SwiGLU / GeGLU / plain GELU / relu² — with LoRA hooks."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.lora import apply_lora_linear
+from repro.models.common import activation_fn, fan_in_init, is_glu
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str,
+             dtype=jnp.float32, layers: Optional[int] = None) -> Dict:
+    ks = jax.random.split(key, 3)
+    L = () if layers is None else (layers,)
+    p = {"down": {"w": fan_in_init(ks[2], L + (d_ff, d_model), dtype)}}
+    p["up"] = {"w": fan_in_init(ks[0], L + (d_model, d_ff), dtype)}
+    if is_glu(activation):
+        p["gate"] = {"w": fan_in_init(ks[1], L + (d_model, d_ff), dtype)}
+    return p
+
+
+def apply_mlp(p, adapters, x, activation: str, lora_scale: float):
+    ad = adapters or {}
+    act = activation_fn(activation)
+    up = apply_lora_linear(p["up"], ad.get("up"), x, lora_scale)
+    if "gate" in p:
+        gate = apply_lora_linear(p["gate"], ad.get("gate"), x, lora_scale)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return apply_lora_linear(p["down"], ad.get("down"), h, lora_scale)

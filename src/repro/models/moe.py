@@ -1,0 +1,138 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (expert-parallel).
+
+Design (TPU-native, pjit-shardable):
+  1. router: logits (T, E) → top-k probs/ids (renormalized).
+  2. sort the T·k assignments by expert id; rank-within-expert via
+     searchsorted; drop tokens beyond capacity C = ceil(T·k/E · cf).
+  3. scatter into an (E, C, d) buffer — sharded over the `model` axis on E,
+     so expert weights (E, d, f) are expert-parallel.
+  4. grouped GEMMs via einsum('ecd,edf->ecf'), activation, project back.
+  5. gather back to token order, combine with router weights.
+
+The (E, C, d) buffer is the all-to-all surface: XLA's SPMD partitioner
+materializes the token redistribution across the expert-sharded axis.
+LoRA on experts: adapters with shapes (E, d, r)/(E, r, f) ride the same
+einsum pattern (the paper's rank-scheduling applies per expert).
+
+Aux loss: switch-style load-balancing (mean gate prob × token fraction).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig, ModelConfig
+from repro.models.common import activation_fn, fan_in_init, is_glu
+from repro.models.mlp import apply_mlp, init_mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32,
+             layers: Optional[int] = None) -> Dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    f = m.expert_d_ff or cfg.d_ff
+    glu = is_glu(cfg.activation)
+    ks = jax.random.split(key, 5)
+    L = () if layers is None else (layers,)
+    E = m.num_experts
+    p = {
+        "router": {"w": fan_in_init(ks[0], L + (d, E), dtype)},
+        "w_up": fan_in_init(ks[1], L + (E, d, f), dtype),
+        "w_down": fan_in_init(ks[2], L + (E, f, d), dtype),
+    }
+    if glu:
+        p["w_gate"] = fan_in_init(ks[3], L + (E, d, f), dtype)
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * m.num_shared_experts,
+                               cfg.activation, dtype, layers=layers)
+    return p
+
+
+def _dispatch_indices(top_ids: jnp.ndarray, num_experts: int, capacity: int,
+                      top_k: int) -> Tuple[jnp.ndarray, ...]:
+    """Sort-based dispatch bookkeeping.
+
+    top_ids: (T, k) expert ids. Returns (token_idx, expert_idx, slot_idx,
+    keep) each of shape (T·k,), in sorted-by-expert order.
+    """
+    T = top_ids.shape[0]
+    eid = top_ids.reshape(-1)                       # (T·k,)
+    order = jnp.argsort(eid, stable=True)           # sorted assignment order
+    sorted_eid = eid[order]
+    token_idx = order // top_k
+    # rank within each expert group
+    first = jnp.searchsorted(sorted_eid, sorted_eid, side="left")
+    slot = jnp.arange(T * top_k) - first
+    keep = slot < capacity
+    return token_idx, sorted_eid, slot, keep, order
+
+
+def apply_moe(p, adapters, x, cfg: ModelConfig, lora_scale: float
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    f = m.expert_d_ff or cfg.d_ff
+    act = activation_fn(cfg.activation)
+    ad = adapters or {}
+
+    xf = x.reshape(T, d)
+    logits = (xf @ p["router"]["w"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(math.ceil(T * k / E * m.capacity_factor))
+    capacity = max(capacity, 8)
+    tok, eid, slot, keep, order = _dispatch_indices(top_i, E, capacity, k)
+
+    # scatter tokens into the expert buffer (E, C, d)
+    gathered = jnp.take(xf, tok, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[eid, jnp.where(keep, slot, capacity - 1)].add(
+        gathered, mode="drop")
+
+    # expert GEMMs (E-sharded): up/gate/down (+ per-expert LoRA)
+    def expert_lin(w, a_key, h, pat):
+        y = jnp.einsum(pat, h, w)
+        a = ad.get(a_key)
+        if a is not None:
+            lo = jnp.einsum(pat.replace("f", "r"), h, a["a"])
+            y = y + lora_scale * jnp.einsum("ecr,erf->ecf", lo, a["b"])
+        return y
+
+    up = expert_lin(p["w_up"], "w_up", buf, "ecd,edf->ecf")
+    if "w_gate" in p:
+        gate = expert_lin(p["w_gate"], "w_gate", buf, "ecd,edf->ecf")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    a = ad.get("w_down")
+    if a is not None:
+        lo = jnp.einsum("ecf,efr->ecr", h, a["a"])
+        out_e = out_e + lora_scale * jnp.einsum("ecr,erd->ecd", lo, a["b"])
+
+    # gather back to assignment order, weight, combine per token
+    back = out_e[eid, jnp.where(keep, slot, 0)]               # (T·k, d)
+    back = back * keep[:, None].astype(x.dtype)
+    w_sorted = top_p.reshape(-1)[order].astype(x.dtype)
+    back = back * w_sorted[:, None]
+    out = jnp.zeros((T, d), x.dtype).at[tok].add(back)
+
+    # shared experts run densely for every token
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], ad.get("shared"),
+                              xf, cfg.activation, lora_scale)
+
+    # switch-transformer load balance loss
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = m.router_aux_loss * E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

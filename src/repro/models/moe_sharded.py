@@ -1,0 +1,209 @@
+"""Expert-parallel MoE dispatch with shard_map + explicit jax.lax collectives.
+
+Why this exists (§Perf, EXPERIMENTS.md): the global (pjit-automatic)
+sort+scatter dispatch in moe.py makes XLA's SPMD partitioner replicate the
+(E, C_global, d) token buffer on every device ("involuntary full
+rematerialization") — 730 GB/device for DeepSeek-V2 train_4k. Writing the
+dispatch *per shard* bounds the buffer to the local token count and turns
+the token redistribution into one explicit all_to_all over the `model`
+axis — the textbook expert-parallel schedule.
+
+Two paths:
+  A. E % model == 0 (DeepSeek: 160/16): expert-parallel — local dispatch to
+     (E, C_loc, d), all_to_all → (E_loc, 16·C_loc, d), local expert GEMMs,
+     all_to_all back, local combine.
+  B. E < model (grok-1: 8): tensor-parallel experts — every device holds
+     all experts' (d, f/16) weight slices; local dispatch, GEMMs over the
+     f-slice, psum over `model` for the down-projection partial sums.
+
+Per-expert LoRA adapters ride inside the same dispatch (B path: the b/a
+factors are f-sliced by shard_map exactly like the base weights).
+Token axis: local to each (pod, data) shard; x enters replicated over
+`model` (Megatron convention — the residual stream is gathered before
+MLP/MoE anyway).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MoEConfig, ModelConfig
+from repro.models.common import activation_fn, is_glu
+from repro.models.mlp import apply_mlp
+from repro.models.moe import _dispatch_indices
+
+
+def _local_dispatch(xf, top_i, top_p, E, k, capacity):
+    """Per-device dispatch: tokens (T,d) → buffer (E, C, d) + bookkeeping."""
+    tok, eid, slot, keep, order = _dispatch_indices(top_i, E, capacity, k)
+    gathered = jnp.take(xf, tok, axis=0) * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((E, capacity, xf.shape[1]), xf.dtype)
+    buf = buf.at[eid, jnp.where(keep, slot, capacity - 1)].add(
+        gathered, mode="drop")
+    return buf, (tok, eid, slot, keep, order)
+
+
+def _local_combine(out_e, bookkeeping, top_p, T, d):
+    tok, eid, slot, keep, order = bookkeeping
+    back = out_e[eid, jnp.where(keep, slot, 0)]
+    back = back * keep[:, None].astype(out_e.dtype)
+    w_sorted = top_p.reshape(-1)[order].astype(out_e.dtype)
+    back = back * w_sorted[:, None]
+    return jnp.zeros((T, d), out_e.dtype).at[tok].add(back)
+
+
+def apply_moe_sharded(p, adapters, x, cfg: ModelConfig, lora_scale: float,
+                      mesh, dp_axes: Tuple[str, ...]
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shard_map expert-parallel MoE. x: (B, S, d). Returns (out, aux)."""
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    act = activation_fn(cfg.activation)
+    glu = "w_gate" in p
+    msize = mesh.shape["model"]
+    expert_parallel = (E % msize == 0)
+    ad = adapters or {}
+    a_up = ad.get("w_up")
+    a_dn = ad.get("w_down")
+    has_lora = a_up is not None
+
+    dp = dp_axes if dp_axes else None
+    dp_size = 1
+    for a in (dp_axes or ()):
+        dp_size *= mesh.shape[a]
+    # token axis sharded over `model` too when the sequence divides — the
+    # dispatch buffer is then T/(dp·model) instead of T/dp (§Perf iter 3:
+    # replicated-token dispatch was 16× the necessary buffer)
+    seq_over_model = (S % msize == 0)
+    x_spec = P(dp, "model" if seq_over_model else None, None)
+    T_loc = (B // dp_size) * (S // msize if seq_over_model else S)
+    capacity = max(int(math.ceil(T_loc * k / E * m.capacity_factor)), 4)
+
+    router_w = p["router"]["w"]
+
+    def route(xf):
+        logits = (xf @ router_w).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32),
+                      axis=0)
+        aux = m.router_aux_loss * E * jnp.sum(me * ce)
+        return top_p, top_i, aux
+
+    def expert_mlp(buf, w_up, w_gate, w_down, la_up, lb_up, la_dn, lb_dn):
+        """buf: (E?, C, d) local. LoRA factors may be None."""
+        h = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        if la_up is not None:
+            lo = jnp.einsum("ecd,edr->ecr", buf, la_up)
+            h = h + lora_scale * jnp.einsum("ecr,erf->ecf", lo, lb_up)
+        if w_gate is not None:
+            h = act(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * h
+        else:
+            h = act(h)
+        out_e = jnp.einsum("ecf,efd->ecd", h, w_down)
+        if la_dn is not None:
+            lo = jnp.einsum("ecf,efr->ecr", h, la_dn)
+            out_e = out_e + lora_scale * jnp.einsum("ecr,erd->ecd", lo,
+                                                    lb_dn)
+        return out_e
+
+    # FSDP gather of the frozen expert weights (sharded over `data` per
+    # launch/sharding.py — §Perf iter 2): one all-gather per layer, no
+    # gradient traffic (base weights are frozen under LoRA).
+    def _fsdp_gather(w, axis):
+        if w is None:
+            return None
+        for a in ("data",):
+            w = jax.lax.all_gather(w, a, axis=axis, tiled=True)
+        return w
+
+    if expert_parallel:
+        # weights (E, d, f): E over model, f (or f-contraction) over data
+        def body(xl, w_up, w_gate, w_down, la_up, lb_up, la_dn, lb_dn):
+            xf = xl.reshape(-1, d)
+            top_p, top_i, aux = route(xf)
+            buf, book = _local_dispatch(xf, top_i, top_p, E, k, capacity)
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=1, tiled=True)
+            out_e = expert_mlp(buf, _fsdp_gather(w_up, 2),
+                               _fsdp_gather(w_gate, 2),
+                               _fsdp_gather(w_down, 1),
+                               la_up, lb_up, la_dn, lb_dn)
+            out_e = jax.lax.all_to_all(out_e, "model", split_axis=1,
+                                       concat_axis=0, tiled=True)
+            out = _local_combine(out_e, book, top_p, xf.shape[0], d)
+            aux = jax.lax.pmean(aux, "model")
+            if dp:
+                for a in dp:
+                    aux = jax.lax.pmean(aux, a)
+            return out.reshape(xl.shape).astype(xl.dtype), aux
+
+        specs = dict(up=P("model", None, "data"),
+                     gate=P("model", None, "data"),
+                     down=P("model", "data", None),
+                     a_up=P("model", None, None), b_up=P("model", None, None),
+                     a_dn=P("model", None, None), b_dn=P("model", None, None))
+    else:
+        # weights (E, d, f): f over model, d over data (grok E < msize)
+        def body(xl, w_up, w_gate, w_down, la_up, lb_up, la_dn, lb_dn):
+            xf = xl.reshape(-1, d)
+            top_p, top_i, aux = route(xf)
+            buf, book = _local_dispatch(xf, top_i, top_p, E, k, capacity)
+            out_e = expert_mlp(buf, _fsdp_gather(w_up, 1),
+                               _fsdp_gather(w_gate, 1),
+                               _fsdp_gather(w_down, 2),
+                               la_up, lb_up, la_dn, lb_dn)
+            out_e = jax.lax.psum(out_e, "model")   # ff partial sums
+            out = _local_combine(out_e, book, top_p, xf.shape[0], d)
+            if dp:
+                for a in dp:
+                    aux = jax.lax.pmean(aux, a)
+            return out.reshape(xl.shape).astype(xl.dtype), aux
+
+        specs = dict(up=P(None, "data", "model"),
+                     gate=P(None, "data", "model"),
+                     down=P(None, "model", "data"),
+                     a_up=P(None, None, None),        # (E, d, r) replicated
+                     b_up=P(None, None, "model"),     # (E, r, f) f-sliced
+                     a_dn=P(None, "model", None),     # (E, f, r) f-sliced
+                     b_dn=P(None, None, None))        # (E, r, d) replicated
+
+    args = [x, p["w_up"], p.get("w_gate"), p["w_down"],
+            a_up["a"] if has_lora else None,
+            a_up["b"] if has_lora else None,
+            a_dn["a"] if has_lora else None,
+            a_dn["b"] if has_lora else None]
+    in_specs = [x_spec, specs["up"],
+                specs["gate"] if glu else None, specs["down"],
+                specs["a_up"] if has_lora else None,
+                specs["b_up"] if has_lora else None,
+                specs["a_dn"] if has_lora else None,
+                specs["b_dn"] if has_lora else None]
+    # shard_map can't take None args: filter them and re-inject in a wrapper
+    present = [i for i, a in enumerate(args) if a is not None]
+
+    def wrapper(*present_args):
+        full = [None] * len(args)
+        for slot, val in zip(present, present_args):
+            full[slot] = val
+        return body(*full)
+
+    out, aux = jax.shard_map(
+        wrapper, mesh=mesh,
+        in_specs=tuple(in_specs[i] for i in present),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(*[args[i] for i in present])
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], ad.get("shared"), x,
+                              cfg.activation, lora_scale)
+    return out, aux

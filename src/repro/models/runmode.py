@@ -1,0 +1,56 @@
+"""Global run-mode knobs.
+
+COST_UNROLL: when True, every *internal* scan (flash-attention kv blocks,
+WKV6/SSD chunk loops, inter-chunk state carries) is fully unrolled so that
+XLA's HloCostAnalysis — which visits a while-loop body exactly once — counts
+the true op totals. Used ONLY by the dry-run's cost-extrapolation compiles
+(reduced layer counts); never for real execution.
+"""
+COST_UNROLL = False
+
+# USE_PALLAS_ATTN: route full-sequence attention through the Pallas flash
+# kernel (repro.kernels.flash_attention). On CPU this runs interpret mode
+# (slow — for validation); on TPU it is the production path. The jnp flash
+# ref stays the default so dry-run lowering works on the CPU backend.
+USE_PALLAS_ATTN = False
+PALLAS_INTERPRET = True     # CPU container: interpret mode
+
+
+def set_pallas_attn(v: bool, interpret: bool = True) -> None:
+    global USE_PALLAS_ATTN, PALLAS_INTERPRET
+    USE_PALLAS_ATTN = bool(v)
+    PALLAS_INTERPRET = bool(interpret)
+
+
+# Expert-parallel MoE via shard_map (§Perf: the automatic-partitioner
+# scatter dispatch replicates the token buffer — moe_sharded.py). Set by
+# the launch factories; None → pure-pjit path (single-device smoke tests).
+MOE_MESH = None
+MOE_DP_AXES: tuple = ()
+
+
+def set_moe_mesh(mesh, dp_axes=()) -> None:
+    global MOE_MESH, MOE_DP_AXES
+    MOE_MESH = mesh
+    MOE_DP_AXES = tuple(dp_axes)
+
+# FAST_DECODE: single-token decode computes attention directly over the
+# cache (one grouped einsum, no materialized GQA head repeat) instead of
+# the blocked flash path — the flash path's block reshape/transpose copies
+# the whole cache every step. Production default True (§Perf pair 3:
+# memory term 3–9×); the recorded baseline roofline table used False.
+FAST_DECODE = True
+
+
+def set_cost_unroll(v: bool) -> None:
+    global COST_UNROLL
+    COST_UNROLL = bool(v)
+
+
+def set_fast_decode(v: bool) -> None:
+    global FAST_DECODE
+    FAST_DECODE = bool(v)
+
+
+def inner_unroll(n_trips: int) -> int:
+    return n_trips if COST_UNROLL else 1

@@ -1,0 +1,207 @@
+"""RWKV6 ("Finch") block — data-dependent decay linear attention
+(arXiv:2404.05892).
+
+TPU adaptation: the serial WKV recurrence is computed in *chunked parallel
+form* (flash-linear-attention style): intra-chunk contributions become dense
+MXU einsums with log-space decay ratios; inter-chunk state is carried by a
+short lax.scan (S/chunk steps). Decode keeps the (B, H, K, V) state matrix —
+O(1) in sequence length, which is what makes `long_500k` tractable.
+
+Per head (k-dim = v-dim = hd):
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ·(S_{t-1} + diag(u)·k_t v_tᵀ)
+with w_t = exp(-exp(w0 + lora_w(x'_t))) data-dependent per channel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RWKVConfig
+from repro.core.lora import apply_lora_linear
+from repro.models.common import fan_in_init, init_norm, apply_norm
+
+CHUNK = 128
+
+
+def _dims(cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    nheads = cfg.d_model // r.head_dim
+    return r, nheads
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype=jnp.float32,
+               layers: Optional[int] = None) -> Dict:
+    r, nheads = _dims(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    L = () if layers is None else (layers,)
+
+    def lin(k, di, do):
+        return {"w": fan_in_init(k, L + (di, do), dtype)}
+
+    def mu(k):
+        return (0.5 + 0.1 * jax.random.normal(k, L + (d,))).astype(dtype)
+
+    p = {
+        # time-mix
+        "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+        "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+        "w_r": lin(ks[5], d, d), "w_k": lin(ks[6], d, d),
+        "w_v": lin(ks[7], d, d), "w_o": lin(ks[8], d, d),
+        "gate_a": fan_in_init(ks[9], L + (d, r.gate_lora), dtype),
+        "gate_b": fan_in_init(ks[9], L + (r.gate_lora, d), dtype),
+        "w0": jnp.broadcast_to(jnp.linspace(-6.0, -1.0, d), L + (d,)
+                               ).astype(dtype),
+        "decay_a": fan_in_init(ks[10], L + (d, r.decay_lora), dtype),
+        "decay_b": zeros((L + (r.decay_lora, d)), dtype),
+        "u_bonus": (0.1 * jax.random.normal(ks[11], L + (d,))).astype(dtype),
+        "ln_x": jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, L + t.shape),
+            init_norm("layernorm", d, dtype)),
+        # channel-mix
+        "mu_ck": mu(ks[0]), "mu_cr": mu(ks[1]),
+        "ck": lin(ks[2], d, f), "cv": lin(ks[3], f, d),
+        "cr": lin(ks[4], d, d),
+    }
+    return p
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _token_shift(x, mu, last=None):
+    """lerp(x_{t-1}, x_t, mu). last: (b, d) previous token for decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+    return prev + mu * (x - prev)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int):
+    """Chunked WKV6. r,k,v: (b,S,H,K); logw: (b,S,H,K) (≤0); u: (H,K).
+
+    Returns y (b,S,H,K) and final state (b,H,K,K) [K index, V index].
+    """
+    b, S, H, K = r.shape
+    nc = S // chunk
+    assert nc * chunk == S
+    rs = lambda t: t.reshape(b, nc, chunk, H, K)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(logw)
+    cum = jnp.cumsum(wc, axis=2)                       # inclusive (b,nc,Q,H,K)
+    cum_excl = cum - wc                                # exclusive
+
+    # intra-chunk: y_t += Σ_{j<t} (r_t ⊙ exp(cum_excl_t - cum_j))·k_j · v_j
+    #              + (r_t ⊙ u ⊙ k_t)·v_t (diagonal bonus)
+    q_dec = rc * jnp.exp(cum_excl)                     # r_t ⊙ W_{t-1}
+    k_dec = kc * jnp.exp(-cum)                         # k_j / W_j
+    scores = jnp.einsum("bcihk,bcjhk->bchij", q_dec, k_dec)
+    i = jnp.arange(chunk)
+    mask = (i[:, None] > i[None, :]).astype(scores.dtype)
+    y_intra = jnp.einsum("bchij,bcjhv->bcihv", scores * mask, vc)
+    diag = jnp.einsum("bcihk,bcihk->bcih", rc * u[None, None, None], kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk-final states: S_c = diag(exp(cum_Q)) S0 + Σ_j diag(exp(cum_Q-cum_j)) k_j v_jᵀ
+    tail = cum[:, :, -1:, :, :] - cum                  # (b,nc,Q,H,K)
+    st = jnp.einsum("bcjhk,bcjhv->bchkv", kc * jnp.exp(tail), vc)
+    chunk_decay = jnp.exp(cum[:, :, -1])               # (b,nc,H,K)
+
+    def scan_fn(prev, inp):
+        st_c, dec_c = inp
+        new = prev * dec_c[..., None] + st_c
+        return new, prev
+
+    from repro.models import runmode
+    init = jnp.zeros((b, H, K, K), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (st.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2, 3)),
+        unroll=runmode.inner_unroll(nc))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,H,K,K)
+
+    # inter-chunk: y_t += (r_t ⊙ exp(cum_excl_t))ᵀ · S_prev
+    y_off = jnp.einsum("bcihk,bchkv->bcihv", q_dec, prev_states)
+    y = (y_intra + y_off).reshape(b, S, H, K)
+    return y, final
+
+
+def _wkv_step(r, k, v, logw, u, state):
+    """Single decode step. r,k,v,logw: (b,H,K); state: (b,H,K,V)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, ..., None] * kv)
+    new_state = state * jnp.exp(logw)[..., None] + kv
+    return y, new_state
+
+
+def apply_rwkv6_timemix(p, adapters, x, cfg: ModelConfig, lora_scale: float,
+                        state=None):
+    """state: {"wkv": (b,H,K,K), "last": (b,d)} or None for training."""
+    r_cfg, H = _dims(cfg)
+    b, S, d = x.shape
+    K = r_cfg.head_dim
+    ad = adapters or {}
+    last = None if state is None else state["last"]
+
+    def mix(mu):
+        return _token_shift(x, mu, last)
+
+    xr, xk, xv, xw, xg = (mix(p["mu_r"]), mix(p["mu_k"]), mix(p["mu_v"]),
+                          mix(p["mu_w"]), mix(p["mu_g"]))
+    r = apply_lora_linear(p["w_r"], ad.get("w_r"), xr, lora_scale)
+    k = apply_lora_linear(p["w_k"], ad.get("w_k"), xk, lora_scale)
+    v = apply_lora_linear(p["w_v"], ad.get("w_v"), xv, lora_scale)
+    g = jax.nn.silu(xg @ p["gate_a"]) @ p["gate_b"]
+    logw = -jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+         ).astype(jnp.float32))                        # (b,S,d), ≤ 0
+
+    hs = lambda t: t.reshape(b, S, H, K).astype(jnp.float32)
+    rh, kh, vh, wh = hs(r), hs(k), hs(v), hs(logw)
+    u = p["u_bonus"].astype(jnp.float32).reshape(H, K)
+
+    if state is None:
+        if S % CHUNK == 0 and S >= CHUNK:
+            y, final = _wkv_chunked(rh, kh, vh, wh, u, CHUNK)
+        else:
+            y, final = _wkv_chunked(rh, kh, vh, wh, u, S)
+        new_state = None
+    else:
+        y, wkv = _wkv_step(rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0], u,
+                           state["wkv"])
+        y = y[:, None]
+        new_state = {"wkv": wkv, "last": x[:, -1, :]}
+
+    y = y.reshape(b, S, d).astype(x.dtype)
+    y = apply_norm(p["ln_x"], y, "layernorm")
+    y = y * jax.nn.silu(g)
+    out = apply_lora_linear(p["w_o"], ad.get("w_o"), y, lora_scale)
+    return out, new_state
+
+
+def apply_rwkv6_channelmix(p, adapters, x, cfg: ModelConfig,
+                           lora_scale: float, state=None):
+    ad = adapters or {}
+    last = None if state is None else state.get("last_cm")
+    xk = _token_shift(x, p["mu_ck"], last)
+    xr = _token_shift(x, p["mu_cr"], last)
+    kk = apply_lora_linear(p["ck"], ad.get("ck"), xk, lora_scale)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = apply_lora_linear(p["cv"], ad.get("cv"), kk, lora_scale)
+    rr = jax.nn.sigmoid(
+        apply_lora_linear(p["cr"], ad.get("cr"), xr, lora_scale))
+    new_last = None if state is None else x[:, -1, :]
+    return rr * vv, new_last
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    r, H = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, H, r.head_dim, r.head_dim), jnp.float32),
+        "last": jnp.zeros((batch, cfg.d_model), dtype),
+        "last_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,714 @@
+"""Unified decoder model covering all assigned architecture families.
+
+Layout: consecutive blocks of the same kind are grouped into *segments*;
+each segment's parameters are stacked on a leading layer axis and executed
+with ``jax.lax.scan`` (small HLO even for 64-layer models — essential for the
+512-device dry-run compiles). Zamba2's shared attention block is closed over
+inside the scan body (parameters reused every application, as in the paper).
+
+Public API:
+    init_params(key, cfg, dtype)            -> params pytree
+    init_adapters(key, cfg, lora, dtype)    -> LoRA adapter pytree (trainable)
+    forward(params, adapters, cfg, lora, batch, ...) -> (logits, aux)
+    decode_step(params, adapters, cfg, lora, token, caches, position, ...)
+    init_caches(cfg, batch, cache_len, ...)
+    loss_fn(...)                            -> (scalar, metrics)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (BLOCK_ATTN, BLOCK_MAMBA2, BLOCK_MLA, BLOCK_RWKV6,
+                          LoRAConfig, ModelConfig)
+from repro.core import lora as lora_lib
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.common import (apply_norm, dtype_of, init_norm, normal_init,
+                                 softcap)
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+def segments_of(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[(kind, n_layers), ...] — consecutive runs of the same block kind."""
+    segs: List[Tuple[str, int]] = []
+    for kind in cfg.blocks():
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype, layers: int) -> Dict:
+    ks = jax.random.split(key, 4)
+    L = layers
+    if kind == BLOCK_ATTN:
+        p = {
+            "norm1": _stack_norm(cfg.norm, cfg.d_model, dtype, L),
+            "attn": attn_lib.init_attention(ks[0], cfg, dtype, layers=L),
+            "norm2": _stack_norm(cfg.norm, cfg.d_model, dtype, L),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype, layers=L)
+        else:
+            p["mlp"] = mlp_lib.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.activation, dtype, layers=L)
+        return p
+    if kind == BLOCK_MLA:
+        p = {
+            "norm1": _stack_norm(cfg.norm, cfg.d_model, dtype, L),
+            "mla": attn_lib.init_mla(ks[0], cfg, dtype, layers=L),
+            "norm2": _stack_norm(cfg.norm, cfg.d_model, dtype, L),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype, layers=L)
+        else:
+            p["mlp"] = mlp_lib.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.activation, dtype, layers=L)
+        return p
+    if kind == BLOCK_MAMBA2:
+        return {
+            "norm": _stack_norm(cfg.norm, cfg.d_model, dtype, L),
+            "mamba": mamba_lib.init_mamba2(ks[0], cfg, dtype, layers=L),
+        }
+    if kind == BLOCK_RWKV6:
+        return {
+            "norm1": _stack_norm("layernorm", cfg.d_model, dtype, L),
+            "norm2": _stack_norm("layernorm", cfg.d_model, dtype, L),
+            "rwkv": rwkv_lib.init_rwkv6(ks[0], cfg, dtype, layers=L),
+        }
+    raise ValueError(kind)
+
+
+def _stack_norm(kind, dim, dtype, layers):
+    base = init_norm(kind, dim, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (layers,) + x.shape), base)
+
+
+def init_params(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or dtype_of(cfg.dtype)
+    ks = jax.random.split(key, len(segments_of(cfg)) + 4)
+    params: Dict[str, Any] = {
+        "embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                             dtype=dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "segments": [],
+    }
+    for i, (kind, n) in enumerate(segments_of(cfg)):
+        params["segments"].append(_init_block(ks[i + 1], kind, cfg, dtype, n))
+    if cfg.shared_attn_every:
+        # zamba2: one shared transformer block (unstacked), reused
+        shared_cfg = cfg
+        params["shared_attn"] = {
+            "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn_lib.init_attention(ks[-3], shared_cfg, dtype),
+            "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": mlp_lib.init_mlp(ks[-2], cfg.d_model, cfg.d_ff,
+                                    cfg.activation, dtype),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": normal_init(
+            ks[-1], (cfg.d_model, cfg.vocab_size), dtype=dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# LoRA adapters
+# ---------------------------------------------------------------------------
+
+# per block kind: (path, d_in_fn, d_out_fn) of LoRA-targeted linears
+def _lora_targets(kind: str, cfg: ModelConfig, lora: LoRAConfig):
+    d, hd = cfg.d_model, (cfg.resolved_head_dim if cfg.num_heads else 0)
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    t = []
+    if kind == BLOCK_ATTN:
+        if lora.target_attn:
+            t += [(("attn", "q"), d, nq * hd), (("attn", "k"), d, nkv * hd),
+                  (("attn", "v"), d, nkv * hd), (("attn", "o"), nq * hd, d)]
+        if lora.target_mlp and cfg.moe is None:
+            t += _mlp_targets(("mlp",), cfg)
+        elif lora.target_mlp and cfg.moe is not None:
+            if cfg.moe.num_shared_experts:
+                t += _mlp_targets(("moe", "shared"), cfg, shared_moe=True)
+            # routed experts: per-expert adapters (E, d, r) — grok path
+            else:
+                f = cfg.moe.expert_d_ff or cfg.d_ff
+                E = cfg.moe.num_experts
+                t += [(("moe", "w_up"), (E, d), (E, f)),
+                      (("moe", "w_down"), (E, f), (E, d))]
+    elif kind == BLOCK_MLA:
+        m = cfg.mla
+        if lora.target_attn:
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            if m.q_lora_rank:
+                t += [(("mla", "q_down"), d, m.q_lora_rank),
+                      (("mla", "q_up"), m.q_lora_rank, nq * qk)]
+            else:
+                t += [(("mla", "q"), d, nq * qk)]
+            t += [(("mla", "kv_down"), d, m.kv_lora_rank + m.qk_rope_head_dim),
+                  (("mla", "o"), nq * m.v_head_dim, d)]
+        if lora.target_mlp and cfg.moe is not None and cfg.moe.num_shared_experts:
+            t += _mlp_targets(("moe", "shared"), cfg, shared_moe=True)
+    elif kind == BLOCK_MAMBA2:
+        s = cfg.ssm
+        d_in = s.expand * d
+        nheads = d_in // s.head_dim
+        proj_out = 2 * d_in + 2 * s.state_dim + nheads
+        t += [(("mamba", "in_proj"), d, proj_out),
+              (("mamba", "out_proj"), d_in, d)]
+    elif kind == BLOCK_RWKV6:
+        t += [(("rwkv", "w_r"), d, d), (("rwkv", "w_k"), d, d),
+              (("rwkv", "w_v"), d, d), (("rwkv", "w_o"), d, d)]
+        if lora.target_mlp:
+            t += [(("rwkv", "ck"), d, cfg.d_ff), (("rwkv", "cv"), cfg.d_ff, d)]
+    return t
+
+
+def _mlp_targets(prefix, cfg: ModelConfig, shared_moe=False):
+    d = cfg.d_model
+    f = (cfg.moe.expert_d_ff or cfg.d_ff) if shared_moe else cfg.d_ff
+    if shared_moe:
+        f = f * cfg.moe.num_shared_experts
+    t = [(prefix + ("up",), d, f), (prefix + ("down",), f, d)]
+    from repro.models.common import is_glu
+    if is_glu(cfg.activation):
+        t.append((prefix + ("gate",), d, f))
+    return t
+
+
+def init_adapters(key, cfg: ModelConfig, lora: LoRAConfig, dtype=jnp.float32,
+                  rank: Optional[int] = None) -> Dict:
+    """Adapter pytree mirroring the (stacked) param structure."""
+    rank = rank or lora.rank
+    segs = segments_of(cfg)
+    out: Dict[str, Any] = {"segments": []}
+    keys = jax.random.split(key, len(segs) + 1)
+    for (kind, n), k in zip(segs, keys[:-1]):
+        seg_ad: Dict[str, Any] = {}
+        targets = _lora_targets(kind, cfg, lora)
+        tkeys = jax.random.split(k, max(len(targets), 1))
+        for (path, din, dout), tk in zip(targets, tkeys):
+            node = seg_ad
+            for part in path[:-1]:
+                node = node.setdefault(part, {})
+            if isinstance(din, tuple):       # per-expert adapters (E, ·, r)
+                E, di = din
+                _, do = dout
+                a = (jax.random.normal(tk, (n, E, di, rank))
+                     / jnp.sqrt(jnp.asarray(di, jnp.float32))).astype(dtype)
+                node[path[-1]] = {"a": a,
+                                  "b": jnp.zeros((n, E, rank, do), dtype)}
+            else:
+                node[path[-1]] = lora_lib.init_adapter(
+                    tk, din, dout, rank, dtype, layers=n)
+        out["segments"].append(seg_ad)
+    if cfg.shared_attn_every:
+        sk = jax.random.split(keys[-1], 8)
+        sa: Dict[str, Any] = {"attn": {}, "mlp": {}}
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        for i, nm in enumerate(("q", "k", "v")):
+            nh = cfg.num_heads if nm == "q" else cfg.num_kv_heads
+            sa["attn"][nm] = lora_lib.init_adapter(sk[i], d, nh * hd, rank,
+                                                   dtype)
+        sa["attn"]["o"] = lora_lib.init_adapter(
+            sk[3], cfg.num_heads * hd, d, rank, dtype)
+        for i, (nm, di, do) in enumerate((("up", d, cfg.d_ff),
+                                          ("gate", d, cfg.d_ff),
+                                          ("down", cfg.d_ff, d))):
+            sa["mlp"][nm] = lora_lib.init_adapter(sk[4 + i], di, do, rank,
+                                                  dtype)
+        out["shared_attn"] = sa
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(kind: str, p, ad, x, cfg: ModelConfig, scale, positions,
+                 cache=None, cache_index=None, sliding_window=None,
+                 shared=None, shared_ad=None, layer_in_seg=None):
+    """Apply one block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    ad = ad or {}
+    if kind in (BLOCK_ATTN, BLOCK_MLA):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        if kind == BLOCK_ATTN:
+            o, nc = attn_lib.apply_attention(
+                p["attn"], ad.get("attn"), h, cfg, scale, positions,
+                cache=cache, cache_index=cache_index,
+                sliding_window=sliding_window)
+        else:
+            o, nc = attn_lib.apply_mla(
+                p["mla"], ad.get("mla"), h, cfg, scale, positions,
+                cache=cache, cache_index=cache_index,
+                sliding_window=sliding_window)
+        x = x + o
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            from repro.models import runmode
+            if runmode.MOE_MESH is not None:
+                from repro.models.moe_sharded import apply_moe_sharded
+                o, aux = apply_moe_sharded(
+                    p["moe"], ad.get("moe"), h, cfg, scale,
+                    runmode.MOE_MESH, runmode.MOE_DP_AXES)
+            else:
+                o, aux = moe_lib.apply_moe(p["moe"], ad.get("moe"), h, cfg,
+                                           scale)
+        else:
+            o = mlp_lib.apply_mlp(p["mlp"], ad.get("mlp"), h, cfg.activation,
+                                  scale)
+        return x + o, nc, aux
+    if kind == BLOCK_MAMBA2:
+        h = apply_norm(p["norm"], x, cfg.norm)
+        o, ns = mamba_lib.apply_mamba2(p["mamba"], ad.get("mamba"), h, cfg,
+                                       scale, state=cache)
+        return x + o, ns, aux
+    if kind == BLOCK_RWKV6:
+        h = apply_norm(p["norm1"], x, "layernorm")
+        o, ns = rwkv_lib.apply_rwkv6_timemix(p["rwkv"], ad.get("rwkv"), h,
+                                             cfg, scale, state=cache)
+        x = x + o
+        h = apply_norm(p["norm2"], x, "layernorm")
+        o, new_last = rwkv_lib.apply_rwkv6_channelmix(
+            p["rwkv"], ad.get("rwkv"), h, cfg, scale, state=cache)
+        if ns is not None:
+            ns = dict(ns, last_cm=new_last)
+        return x + o, ns, aux
+    raise ValueError(kind)
+
+
+def _shared_attn_apply(p, ad, x, cfg, scale, positions, cache=None,
+                       cache_index=None, sliding_window=None):
+    ad = ad or {}
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    o, nc = attn_lib.apply_attention(p["attn"], ad.get("attn"), h, cfg, scale,
+                                     positions, cache=cache,
+                                     cache_index=cache_index,
+                                     sliding_window=sliding_window)
+    x = x + o
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    o = mlp_lib.apply_mlp(p["mlp"], ad.get("mlp"), h, cfg.activation, scale)
+    return x + o, nc
+
+
+def _embed(params, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, int]:
+    """Returns (x (B,S,d), num_prefix) — prefix embeds prepended for VLM/audio."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    npref = 0
+    if "prefix_embeds" in batch and batch["prefix_embeds"] is not None:
+        pre = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        npref = pre.shape[1]
+    return x, npref
+
+
+def forward_hidden(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
+                   batch: Dict, *, sliding_window=None, remat: bool = False,
+                   constrain=None, scan_unroll: int = 1
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward returning final-norm hidden states (B, S, d) and
+    aux loss — the lm_head is applied by the caller (loss_fn may chunk it
+    over the sequence to bound logits memory)."""
+    scale = lora.scale
+    x, _ = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    window = sliding_window or cfg.sliding_window
+    if constrain is not None:
+        x = constrain(x)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+    shared_ad = (adapters or {}).get("shared_attn")
+    seg_ads = (adapters or {}).get("segments",
+                                   [None] * len(params["segments"]))
+
+    for seg_idx, ((kind, n), seg_p) in enumerate(
+            zip(segments_of(cfg), params["segments"])):
+        seg_ad = seg_ads[seg_idx]
+        if cfg.shared_attn_every and kind == BLOCK_MAMBA2:
+            x, aux = _scan_mamba_with_shared(
+                seg_p, seg_ad, x, cfg, scale, positions, n, shared, shared_ad,
+                window, remat=remat, constrain=constrain,
+                scan_unroll=scan_unroll)
+        else:
+            x, aux = _scan_segment(kind, seg_p, seg_ad, x, cfg, scale,
+                                   positions, n, window, remat=remat,
+                                   constrain=constrain,
+                                   scan_unroll=scan_unroll)
+        aux_total = aux_total + aux
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux_total
+
+
+def forward(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
+            batch: Dict, *, sliding_window=None, remat: bool = False,
+            constrain=None, scan_unroll: int = 1
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence causal forward (train / prefill).
+
+    batch: {"tokens": (B,S) int32 [, "prefix_embeds": (B,P,d)]}.
+    remat: checkpoint each block (backward recompute) — required for the
+    large-arch train shapes to fit HBM.
+    constrain: optional fn(x)->x applied to the residual stream inside the
+    layer scan (jax.lax.with_sharding_constraint hook for Megatron-SP-style
+    sequence sharding — launch/sharding.py).
+    Returns (logits (B, P+S, V), aux_loss).
+    """
+    x, aux_total = forward_hidden(
+        params, adapters, cfg, lora, batch, sliding_window=sliding_window,
+        remat=remat, constrain=constrain, scan_unroll=scan_unroll)
+    logits = _lm_head(params, cfg, x)
+    return logits, aux_total
+
+
+def _lm_head(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return softcap(logits, cfg.logits_softcap)
+
+
+def _scan_segment(kind, seg_p, seg_ad, x, cfg, scale, positions, n, window,
+                  remat=False, constrain=None, scan_unroll=1):
+    def block(h, p, ad):
+        if constrain is not None:
+            h = constrain(h)
+        h, _, a = _block_apply(kind, p, ad, h, cfg, scale, positions,
+                               sliding_window=window)
+        if constrain is not None:
+            h = constrain(h)
+        return h, a
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, layer):
+        h, aux = carry
+        if seg_ad is None:
+            p, ad = layer, None
+        else:
+            p, ad = layer
+        h, a = block(h, p, ad)
+        return (h, aux + a), None
+
+    xs = seg_p if seg_ad is None else (seg_p, seg_ad)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                               unroll=min(scan_unroll, n))
+    return x, aux
+
+
+def _scan_mamba_with_shared(seg_p, seg_ad, x, cfg, scale, positions, n,
+                            shared, shared_ad, window, remat=False,
+                            constrain=None, scan_unroll=1):
+    """Zamba2: scan groups of `shared_attn_every` mamba layers, then apply the
+    (parameter-shared) attention block between groups."""
+    k = cfg.shared_attn_every
+    ngroups = n // k
+    rem = n - ngroups * k
+
+    def regroup(t):
+        return t.reshape((ngroups, k) + t.shape[1:])
+
+    main_p = jax.tree_util.tree_map(lambda t: regroup(t[:ngroups * k]), seg_p)
+    main_ad = (None if seg_ad is None else jax.tree_util.tree_map(
+        lambda t: regroup(t[:ngroups * k]), seg_ad))
+
+    def mamba_block(hh, p, ad):
+        if constrain is not None:
+            hh = constrain(hh)
+        hh, _, _ = _block_apply(BLOCK_MAMBA2, p, ad, hh, cfg, scale,
+                                positions, sliding_window=window)
+        if constrain is not None:
+            hh = constrain(hh)
+        return hh
+
+    def shared_block(hh):
+        if constrain is not None:
+            hh = constrain(hh)
+        hh, _ = _shared_attn_apply(shared, shared_ad, hh, cfg, scale,
+                                   positions, sliding_window=window)
+        if constrain is not None:
+            hh = constrain(hh)
+        return hh
+
+    if remat:
+        mamba_block = jax.checkpoint(
+            mamba_block, policy=jax.checkpoint_policies.nothing_saveable)
+        shared_block = jax.checkpoint(
+            shared_block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def inner(h, layers_p, layers_ad):
+        def body(carry, layer):
+            hh = carry
+            if layers_ad is None:
+                p, ad = layer, None
+            else:
+                p, ad = layer
+            hh = mamba_block(hh, p, ad)
+            return hh, None
+        xs = layers_p if layers_ad is None else (layers_p, layers_ad)
+        h, _ = jax.lax.scan(body, h, xs,
+                            unroll=min(scan_unroll, cfg.shared_attn_every))
+        return h
+
+    def outer_body(h, group):
+        if main_ad is None:
+            gp, gad = group, None
+        else:
+            gp, gad = group
+        h = inner(h, gp, gad)
+        h = shared_block(h)
+        return h, None
+
+    xs = main_p if main_ad is None else (main_p, main_ad)
+    x, _ = jax.lax.scan(outer_body, x, xs,
+                        unroll=min(scan_unroll, max(ngroups, 1)))
+    if rem:
+        tail_p = jax.tree_util.tree_map(lambda t: t[ngroups * k:], seg_p)
+        tail_ad = (None if seg_ad is None else jax.tree_util.tree_map(
+            lambda t: t[ngroups * k:], seg_ad))
+        x = inner(x, tail_p, tail_ad)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                dtype=jnp.bfloat16) -> List:
+    """Per-segment cache stacks (leading layer axis) + shared-attn cache."""
+    caches: Dict[str, Any] = {"segments": []}
+    for kind, n in segments_of(cfg):
+        if kind == BLOCK_ATTN:
+            c = attn_lib.init_cache(cfg, batch, cache_len, dtype)
+        elif kind == BLOCK_MLA:
+            c = attn_lib.init_mla_cache(cfg, batch, cache_len, dtype)
+        elif kind == BLOCK_MAMBA2:
+            c = mamba_lib.init_mamba2_state(cfg, batch, dtype)
+        elif kind == BLOCK_RWKV6:
+            c = rwkv_lib.init_rwkv6_state(cfg, batch, dtype)
+        else:
+            raise ValueError(kind)
+        caches["segments"].append(
+            jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(t, (n,) + t.shape), c))
+    if cfg.shared_attn_every:
+        nshared = (cfg.num_layers // cfg.shared_attn_every)
+        c = attn_lib.init_cache(cfg, batch, cache_len, dtype)
+        caches["shared_attn"] = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (nshared,) + t.shape), c)
+    return caches
+
+
+def decode_step(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
+                token: jnp.ndarray, caches, position, *,
+                sliding_window=None, scan_unroll: int = 1
+                ) -> Tuple[jnp.ndarray, Any]:
+    """One-token decode. token: (B,1) int32; position: scalar int32 —
+    absolute position of the new token; cache write slot = position % len.
+
+    Returns (logits (B,1,V), new_caches).
+    """
+    scale = lora.scale
+    x = jnp.take(params["embed"], token, axis=0)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.asarray(position, jnp.int32).reshape(1, 1), (B, 1))
+    window = sliding_window or cfg.sliding_window
+
+    shared = params.get("shared_attn")
+    shared_ad = (adapters or {}).get("shared_attn")
+    seg_ads = (adapters or {}).get("segments",
+                                   [None] * len(params["segments"]))
+    new_caches: Dict[str, Any] = {"segments": []}
+    shared_cache = caches.get("shared_attn")
+    shared_cache_out = None
+
+    for seg_idx, ((kind, n), seg_p) in enumerate(
+            zip(segments_of(cfg), params["segments"])):
+        seg_ad = seg_ads[seg_idx]
+        seg_cache = caches["segments"][seg_idx]
+        if cfg.shared_attn_every and kind == BLOCK_MAMBA2:
+            x, nc, shared_cache_out = _decode_mamba_with_shared(
+                seg_p, seg_ad, x, cfg, scale, positions, n, shared, shared_ad,
+                seg_cache, shared_cache, position, window,
+                scan_unroll=scan_unroll)
+        else:
+            x, nc = _decode_segment(kind, seg_p, seg_ad, x, cfg, scale,
+                                    positions, seg_cache, position, window,
+                                    scan_unroll=scan_unroll)
+        new_caches["segments"].append(nc)
+    if shared_cache_out is not None:
+        new_caches["shared_attn"] = shared_cache_out
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _lm_head(params, cfg, x)
+    return logits, new_caches
+
+
+def _decode_segment(kind, seg_p, seg_ad, x, cfg, scale, positions, seg_cache,
+                    position, window, scan_unroll=1):
+    cache_index = positions[0, 0] % _cache_len(kind, seg_cache)
+
+    def body(carry, layer):
+        h = carry
+        if seg_ad is None:
+            p, c = layer
+            ad = None
+        else:
+            p, ad, c = layer
+        h, nc, _ = _block_apply(kind, p, ad, h, cfg, scale, positions,
+                                cache=c, cache_index=cache_index,
+                                sliding_window=window)
+        return h, nc
+
+    xs = (seg_p, seg_cache) if seg_ad is None else (seg_p, seg_ad, seg_cache)
+    n_layers = jax.tree_util.tree_leaves(seg_p)[0].shape[0]
+    x, new_cache = jax.lax.scan(body, x, xs,
+                                unroll=min(scan_unroll, n_layers))
+    return x, new_cache
+
+
+def _cache_len(kind, seg_cache):
+    if kind in (BLOCK_ATTN,):
+        return seg_cache["k"].shape[2]       # (L, B, Sc, ...)
+    if kind == BLOCK_MLA:
+        return seg_cache["c_kv"].shape[2]
+    return 1  # SSM states have no positional ring buffer
+
+
+def _decode_mamba_with_shared(seg_p, seg_ad, x, cfg, scale, positions, n,
+                              shared, shared_ad, seg_cache, shared_cache,
+                              position, window, scan_unroll=1):
+    k = cfg.shared_attn_every
+    ngroups = n // k
+    cache_index = positions[0, 0] % shared_cache["k"].shape[2]
+
+    def regroup(t):
+        return t.reshape((ngroups, k) + t.shape[1:])
+
+    gp = jax.tree_util.tree_map(regroup, seg_p)
+    gad = (None if seg_ad is None
+           else jax.tree_util.tree_map(regroup, seg_ad))
+    gcache = jax.tree_util.tree_map(regroup, seg_cache)
+
+    def outer(carry, group):
+        h = carry
+        if gad is None:
+            p_g, c_g, sc = group
+            a_g = None
+        else:
+            p_g, a_g, c_g, sc = group
+
+        def inner_body(hh, layer):
+            if a_g is None:
+                p, c = layer
+                ad = None
+            else:
+                p, ad, c = layer
+            hh, nc, _ = _block_apply(BLOCK_MAMBA2, p, ad, hh, cfg, scale,
+                                     positions, cache=c)
+            return hh, nc
+
+        xs = (p_g, c_g) if a_g is None else (p_g, a_g, c_g)
+        h, ncs = jax.lax.scan(inner_body, h, xs,
+                              unroll=min(scan_unroll, cfg.shared_attn_every))
+        h, nsc = _shared_attn_apply(shared, shared_ad, h, cfg, scale,
+                                    positions, cache=sc,
+                                    cache_index=cache_index,
+                                    sliding_window=window)
+        return h, (ncs, nsc)
+
+    xs = (gp, gcache, shared_cache) if gad is None else (
+        gp, gad, gcache, shared_cache)
+    x, (new_gcache, new_shared) = jax.lax.scan(
+        outer, x, xs, unroll=min(scan_unroll, max(ngroups, 1)))
+    new_cache = jax.tree_util.tree_map(
+        lambda t: t.reshape((n,) + t.shape[2:]), new_gcache)
+    return x, new_cache, new_shared
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
+            batch: Dict, *, remat: bool = False, constrain=None,
+            scan_unroll: int = 1, ce_chunk: int = 0
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token CE (or classification CE when batch has "labels" of rank 1).
+
+    batch: tokens (B,S); labels (B,S) shifted targets with -100 = masked,
+    or (B,) class labels (ViT-style classification for the paper's tasks).
+    ce_chunk > 0: compute logits+CE in sequence chunks of that size under
+    remat — bounds peak logits memory to B×chunk×V (§Perf: the lm_head
+    dominates train memory for 100k+ vocabularies).
+    """
+    hidden, aux = forward_hidden(params, adapters, cfg, lora, batch,
+                                 remat=remat, constrain=constrain,
+                                 scan_unroll=scan_unroll)
+    labels = batch["labels"]
+    if labels.ndim == 1:
+        # classification: use the last position's logits
+        cls_logits = _lm_head(params, cfg, hidden[:, -1, :])
+        lp = jax.nn.log_softmax(cls_logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(lp, labels[:, None], axis=-1)[:, 0]
+        loss = -jnp.mean(ll)
+        acc = jnp.mean((jnp.argmax(cls_logits, -1) == labels).astype(
+            jnp.float32))
+        return loss + aux, {"loss": loss, "aux": aux, "accuracy": acc}
+    # language modelling
+    npref = hidden.shape[1] - labels.shape[1]
+    hidden = hidden[:, npref:, :]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+
+    def ce_of(h_blk, lab_blk, mask_blk):
+        logits = _lm_head(params, cfg, h_blk)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(lp, lab_blk[..., None], axis=-1)[..., 0]
+        hit = (jnp.argmax(logits, -1) == lab_blk).astype(jnp.float32)
+        return (-jnp.sum(ll * mask_blk), jnp.sum(hit * mask_blk))
+
+    S = hidden.shape[1]
+    if ce_chunk and S % ce_chunk == 0 and S > ce_chunk:
+        nc = S // ce_chunk
+
+        def body(carry, blk):
+            h_blk, lab_blk, mask_blk = blk
+            l, h = jax.checkpoint(ce_of)(h_blk, lab_blk, mask_blk)
+            return (carry[0] + l, carry[1] + h), None
+
+        rs = lambda t: t.reshape((t.shape[0], nc, ce_chunk) + t.shape[2:]
+                                 ).swapaxes(0, 1)
+        (loss_sum, hit_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (rs(hidden), rs(lab), rs(mask)))
+    else:
+        loss_sum, hit_sum = ce_of(hidden, lab, mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = loss_sum / denom
+    acc = hit_sum / denom
+    return loss + aux, {"loss": loss, "aux": aux, "accuracy": acc}

@@ -1,0 +1,3 @@
+from repro.optim.adam import adam, adamw, apply_updates, sgd  # noqa: F401
+from repro.optim.schedules import (constant, cosine_decay,  # noqa: F401
+                                   linear_warmup)

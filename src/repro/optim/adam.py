@@ -1,0 +1,101 @@
+"""Optimizers in pure JAX (optax is not available offline) — optax-style
+(init_fn, update_fn) gradient transformations over arbitrary pytrees.
+
+Used for the paper's local fine-tuning (Adam, lr 1e-5, §V-A) on the LoRA
+adapter pytree only (frozen base).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Optional[Any]], Tuple[Any, Any]]
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+         ) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=z,
+                         nu=_tmap(jnp.copy, z))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state.mu, grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2)
+                   * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype if p is not None else u.dtype)
+
+        if params is None:
+            updates = _tmap(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = _tmap(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    class SGDState(NamedTuple):
+        step: jnp.ndarray
+        vel: Any
+
+    def init(params):
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        vel=_tmap(lambda p: jnp.zeros_like(p), params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        vel = _tmap(lambda v, g: momentum * v + g, state.vel, grads)
+        updates = _tmap(lambda v: -lr_fn(step) * v, vel)
+        return updates, SGDState(step=step, vel=vel)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return _tmap(lambda g: g * factor, grads), n

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (collective_bytes_from_hlo,  # noqa: F401
+                                     roofline_terms, analyze_compiled)

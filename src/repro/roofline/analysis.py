@@ -1,0 +1,147 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis — we parse the (post-SPMD) HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional
+
+from repro.config import HW_V5E, HardwareConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,1024,512]{2,1,0} all-gather(bf16[2,64,512]{2,1,0} %x), ...
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|[\w\[\],{}\s/]+?)\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum of *output* operand sizes per collective kind (whole program,
+    all shards — output shape of the op as written in the annotated HLO)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip().endswith("-done("):
+            continue   # avoid double counting start/done pairs
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    out_named = {f"{k}_bytes": v for k, v in out.items()}
+    out_named.update({f"{k}_count": counts[k] for k in _COLLECTIVES})
+    out_named["total_bytes"] = sum(out.values())
+    return out_named
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_fraction: float   # MODEL_FLOPS / HLO_FLOPs
+
+    def as_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int, model_flops: float,
+                   hw: HardwareConfig = HW_V5E) -> RooflineTerms:
+    compute_s = flops / (chips * hw.peak_flops)
+    memory_s = hbm_bytes / (chips * hw.hbm_bw)
+    collective_s = collective_bytes / (chips * hw.ici_bw)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm_bytes,
+        collective_bytes=collective_bytes, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_fraction=(model_flops / flops) if flops else 0.0)
+
+
+def raw_costs(compiled, chips: int) -> Dict[str, float]:
+    """Per-device HloCostAnalysis (SPMD module) scaled to GLOBAL totals.
+
+    NOTE: XLA visits while-loop bodies once; callers must compile with
+    unrolled scans (runmode.COST_UNROLL + scan_unroll) for true totals —
+    the dry-run's cost-extrapolation phase does exactly that.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) * chips
+    hbm = float(ca.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": flops, "hbm_bytes": hbm,
+            "collective_bytes": float(coll["total_bytes"]) * chips,
+            "collective_detail": coll}
+
+
+def memory_report(compiled) -> Dict[str, Any]:
+    mem: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[attr] = getattr(ma, attr, None)
+        args = mem.get("argument_size_in_bytes") or 0
+        temp = mem.get("temp_size_in_bytes") or 0
+        out = mem.get("output_size_in_bytes") or 0
+        mem["per_device_total_gb"] = round((args + temp + out) / 2**30, 3)
+    except Exception as e:   # CPU backend may not expose it
+        mem["error"] = str(e)
+    return mem
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float,
+                     hw: HardwareConfig = HW_V5E) -> Dict[str, Any]:
+    """Full analysis of one compiled step (global totals + roofline)."""
+    rc = raw_costs(compiled, chips)
+    terms = roofline_terms(rc["flops"], rc["hbm_bytes"],
+                           rc["collective_bytes"], chips, model_flops, hw)
+    return {"roofline": terms.as_dict(),
+            "collectives": rc["collective_detail"],
+            "memory": memory_report(compiled)}

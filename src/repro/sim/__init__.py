@@ -1,0 +1,4 @@
+from repro.sim.channel import ChannelModel, ChannelConfig  # noqa: F401
+from repro.sim.mobility_model import (MobilityModel, MobilitySimConfig,  # noqa: F401
+                                      RSU)
+from repro.sim.simulator import IoVSimulator, SimConfig  # noqa: F401

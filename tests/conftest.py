@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests and benches must see the
+single real CPU device; only launch/dryrun.py forces 512 host devices."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import LoRAConfig
+
+REDUCED_MODULES = {
+    "smollm-135m": "smollm_135m",
+    "starcoder2-15b": "starcoder2_15b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "paligemma-3b": "paligemma_3b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "grok-1-314b": "grok1_314b",
+    "gemma-7b": "gemma_7b",
+    "musicgen-medium": "musicgen_medium",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+def reduced_config(arch_id: str):
+    mod = importlib.import_module("repro.configs." + REDUCED_MODULES[arch_id])
+    return mod.reduced()
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def lora_cfg():
+    return LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8))

@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED variant of each
+assigned family — one forward and one train step on CPU; asserts output
+shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import REDUCED_MODULES, reduced_config
+from repro.config import LoRAConfig, get_arch, list_archs
+from repro.models import transformer as T
+from repro.optim import adam, apply_updates
+
+ARCHS = sorted(REDUCED_MODULES)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.num_prefix_embeds:
+        batch["prefix_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_registered(arch):
+    cfg = get_arch(arch)
+    assert cfg.source, f"{arch} must cite its source"
+    assert cfg.param_counts()["total"] > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_constraints(arch):
+    cfg = reduced_config(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch, rng_key):
+    cfg = reduced_config(arch)
+    lora = LoRAConfig(rank=4)
+    params = T.init_params(rng_key, cfg, dtype=jnp.float32)
+    adapters = T.init_adapters(rng_key, cfg, lora, rank=4)
+    batch = _batch(cfg, rng_key)
+
+    logits, aux = T.forward(params, adapters, cfg, lora, batch)
+    B, S = batch["tokens"].shape
+    npref = cfg.num_prefix_embeds if cfg.frontend else 0
+    assert logits.shape == (B, S + npref, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN/Inf logits"
+
+    opt = adam(1e-3)
+    opt_state = opt.init(adapters)
+
+    @jax.jit
+    def step(params, adapters, opt_state, batch):
+        def loss(ad):
+            return T.loss_fn(params, ad, cfg, lora, batch)
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(adapters)
+        up, opt_state = opt.update(g, opt_state, adapters)
+        return apply_updates(adapters, up), opt_state, l
+
+    new_ad, _, l = step(params, adapters, opt_state, batch)
+    assert bool(jnp.isfinite(l)), f"{arch}: non-finite loss"
+    # adapters actually moved (b starts at zero; grads must flow)
+    moved = jax.tree_util.tree_reduce(
+        lambda acc, pair: acc, [0])
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), adapters, new_ad)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0, f"{arch}: dead adapters"
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "deepseek-v2-236b",
+                                  "zamba2-2.7b", "rwkv6-7b", "grok-1-314b",
+                                  "paligemma-3b"])
+def test_decode_step(arch, rng_key):
+    cfg = reduced_config(arch)
+    lora = LoRAConfig(rank=4)
+    params = T.init_params(rng_key, cfg, dtype=jnp.float32)
+    B = 2
+    caches = T.init_caches(cfg, B, 32, dtype=jnp.float32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, nc = T.decode_step(params, None, cfg, lora, tok, caches,
+                               jnp.asarray(3, jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,149 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lora_matmul.ops import lora_matmul
+from repro.kernels.lora_matmul.ref import lora_matmul_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: shape / dtype / GQA / window sweep
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, Sq, Sk, H, Hkv, D, window, dtype)
+    (2, 64, 64, 4, 4, 32, None, jnp.float32),
+    (1, 128, 128, 8, 2, 64, None, jnp.float32),
+    (2, 64, 64, 4, 1, 32, None, jnp.float32),     # MQA
+    (1, 64, 64, 4, 2, 32, 16, jnp.float32),       # sliding window
+    (1, 96, 96, 2, 2, 16, None, jnp.float32),     # non-multiple of block
+    (1, 64, 64, 4, 2, 32, None, jnp.bfloat16),    # bf16
+    (2, 32, 32, 2, 2, 128, 8, jnp.float32),       # big head dim + window
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case):
+    B, Sq, Sk, H, Hkv, D, win, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D)).astype(dtype)
+    out = flash_attention(q, k, v, sliding_window=win, block_q=32,
+                          block_k=32, interpret=True)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        sliding_window=win).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+# ---------------------------------------------------------------------------
+# fused LoRA matmul
+# ---------------------------------------------------------------------------
+
+LM_CASES = [
+    (64, 128, 96, 8, jnp.float32),
+    (100, 70, 50, 4, jnp.float32),      # ragged, needs padding
+    (256, 512, 128, 16, jnp.float32),
+    (32, 64, 64, 2, jnp.bfloat16),
+    (128, 128, 128, 64, jnp.float32),   # max candidate rank
+]
+
+
+@pytest.mark.parametrize("case", LM_CASES)
+def test_lora_matmul_matches_ref(case):
+    M, K, N, r, dtype = case
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (M, K)) / K ** 0.25).astype(dtype)
+    w = (jax.random.normal(ks[1], (K, N)) / K ** 0.5).astype(dtype)
+    a = (jax.random.normal(ks[2], (K, r)) / K ** 0.5).astype(dtype)
+    b = jax.random.normal(ks[3], (r, N)).astype(dtype)
+    y = lora_matmul(x, w, a, b, scale=2.0, block_m=32, block_n=32,
+                    block_k=64, interpret=True)
+    yr = lora_matmul_ref(x, w, a, b, 2.0)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                 - yr.astype(jnp.float32)))) < tol
+
+
+def test_lora_matmul_zero_b_equals_base():
+    """b = 0 ⇒ exactly the frozen-base GEMM (LoRA init invariant)."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (64, 64))
+    w = jax.random.normal(ks[1], (64, 64))
+    a = jax.random.normal(ks[2], (64, 8))
+    b = jnp.zeros((8, 64))
+    y = lora_matmul(x, w, a, b, scale=5.0, block_m=32, block_n=32,
+                    block_k=32, interpret=True)
+    assert jnp.allclose(y, x @ w, atol=1e-5)
+
+
+def test_lora_matmul_batched_leading_dims():
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (2, 8, 32))
+    w = jax.random.normal(ks[1], (32, 16))
+    a = jax.random.normal(ks[2], (32, 4))
+    b = jax.random.normal(ks[3], (4, 16))
+    y = lora_matmul(x, w, a, b, scale=1.0, block_m=16, block_n=16,
+                    block_k=16, interpret=True)
+    assert y.shape == (2, 8, 16)
+    yr = lora_matmul_ref(x.reshape(-1, 32), w, a, b, 1.0).reshape(2, 8, 16)
+    assert jnp.allclose(y, yr, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# WKV6
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    (2, 64, 2, 16, 16, jnp.float32),
+    (1, 96, 4, 32, 32, jnp.float32),
+    (2, 50, 2, 16, 16, jnp.float32),    # ragged length
+    (1, 64, 2, 16, 64, jnp.float32),    # single chunk
+    (1, 64, 2, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_matches_ref(case):
+    B, S, H, K, chunk, dtype = case
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, K)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, K)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, K)).astype(dtype)
+    logw = (-jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.5 - 1.0)
+            ).astype(dtype)
+    u = (0.3 * jax.random.normal(ks[4], (H, K))).astype(jnp.float32)
+    y, s = wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, logw, u)
+    # bf16 outputs quantize at ~2^-8 of magnitude — relative tolerance
+    rtol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    scale_y = float(jnp.max(jnp.abs(yr))) + 1e-6
+    scale_s = float(jnp.max(jnp.abs(sr))) + 1e-6
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32) - yr))) < rtol * scale_y
+    assert float(jnp.max(jnp.abs(s - sr))) < rtol * scale_s
+
+
+def test_wkv6_state_continuation():
+    """Chunk boundary invariance: running S=64 in one call must equal the
+    final state of the same sequence chunked 4×16 (state carried in VMEM)."""
+    B, S, H, K = 1, 64, 2, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, K))
+    k = jax.random.normal(ks[1], (B, S, H, K))
+    v = jax.random.normal(ks[2], (B, S, H, K))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.3 - 1.0)
+    u = 0.2 * jax.random.normal(ks[4], (H, K))
+    _, s16 = wkv6(r, k, v, logw, u, chunk=16, interpret=True)
+    _, s64 = wkv6(r, k, v, logw, u, chunk=64, interpret=True)
+    assert float(jnp.max(jnp.abs(s16 - s64))) < 1e-4

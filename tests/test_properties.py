@@ -1,0 +1,152 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import EnergyAllocConfig, LoRAConfig, UCBDualConfig
+from repro.core import aggregation as agg, energy_alloc, svd, ucb_dual
+from repro.core import lora as lora_lib
+
+FAST = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# LoRA algebra
+# ---------------------------------------------------------------------------
+
+@settings(**FAST)
+@given(st.integers(1, 16), st.integers(8, 48), st.integers(8, 48),
+       st.floats(0.25, 8.0))
+def test_merge_delta_rank_bound(rank, d1, d2, scale):
+    key = jax.random.PRNGKey(rank * 1000 + d1)
+    k1, k2 = jax.random.split(key)
+    ad = {"a": jax.random.normal(k1, (d1, rank)),
+          "b": jax.random.normal(k2, (rank, d2))}
+    delta = np.asarray(lora_lib.merge_delta(ad, scale), np.float64)
+    assert delta.shape == (d1, d2)
+    # f32 roundoff scales with ‖delta‖ — use a relative tolerance
+    tol = 1e-5 * max(np.linalg.norm(delta), 1.0)
+    assert np.linalg.matrix_rank(delta, tol=tol) <= rank
+
+
+@settings(**FAST)
+@given(st.integers(1, 8), st.integers(12, 40), st.integers(12, 40))
+def test_factors_from_svd_roundtrip(rank, d1, d2):
+    """factors_from_svd ∘ svd reconstructs any rank-r delta exactly."""
+    key = jax.random.PRNGKey(rank + d1 * 7 + d2 * 13)
+    k1, k2 = jax.random.split(key)
+    delta = (jax.random.normal(k1, (d1, rank))
+             @ jax.random.normal(k2, (rank, d2)))
+    u, s, vt = svd.exact_svd(delta, rank)
+    ad = lora_lib.factors_from_svd(u, s, vt, rank, scale=2.0)
+    back = lora_lib.merge_delta(ad, scale=2.0)
+    assert jnp.allclose(back, delta, atol=1e-3 * float(jnp.abs(delta).max()))
+
+
+@settings(**FAST)
+@given(st.lists(st.sampled_from([1, 2, 4, 8]), min_size=1, max_size=5),
+       st.lists(st.floats(0.1, 10.0), min_size=5, max_size=5))
+def test_aggregation_convex(ranks, weights):
+    """Merged delta is a convex combination: bounded by per-client extremes
+    in Frobenius norm (no padding blow-up — unlike HetLoRA)."""
+    weights = weights[:len(ranks)]
+    trees = []
+    for i, r in enumerate(ranks):
+        k = jax.random.PRNGKey(i)
+        k1, k2 = jax.random.split(k)
+        trees.append({"q": {"a": jax.random.normal(k1, (16, r)),
+                            "b": jax.random.normal(k2, (r, 12))}})
+    merged = agg.aggregate_merged(trees, weights, scale=1.0)
+    norms = [float(jnp.linalg.norm(t["q"]["a"] @ t["q"]["b"]))
+             for t in trees]
+    got = float(jnp.linalg.norm(merged["q"]["delta"]))
+    assert got <= max(norms) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# UCB-DUAL invariants
+# ---------------------------------------------------------------------------
+
+@settings(**FAST)
+@given(st.integers(1, 6), st.integers(2, 6), st.integers(5, 30),
+       st.floats(0.5, 50.0))
+def test_dual_variable_nonnegative(V, K, M, budget):
+    cfg = UCBDualConfig()
+    stt = ucb_dual.init_state(V, K)
+    rng = np.random.default_rng(V * K)
+    for m in range(M):
+        arms = ucb_dual.select_ranks(stt, cfg, jnp.ones(V, bool))
+        r = jnp.asarray(rng.normal(size=V), jnp.float32)
+        e = jnp.asarray(rng.uniform(0, 5, size=V), jnp.float32)
+        stt, info = ucb_dual.update(stt, cfg, arms, r, e,
+                                    jnp.asarray(budget, jnp.float32))
+        assert float(stt.lam) >= 0.0
+        assert float(info["violation"]) >= 0.0
+    # counts total == V·M
+    assert float(stt.counts.sum()) == V * M
+
+
+@settings(**FAST)
+@given(st.integers(2, 5))
+def test_select_prefers_unexplored(K):
+    cfg = UCBDualConfig()
+    stt = ucb_dual.init_state(1, K)
+    # visit arm 0 once with a huge reward; selection must still move on to
+    # unexplored arms (infinite-optimism tie-break)
+    stt, _ = ucb_dual.update(stt, cfg, jnp.array([0]), jnp.array([100.0]),
+                             jnp.array([0.0]), jnp.asarray(1e9))
+    arms = ucb_dual.select_ranks(stt, cfg, jnp.ones(1, bool))
+    assert int(arms[0]) != 0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 invariants
+# ---------------------------------------------------------------------------
+
+@settings(**FAST)
+@given(st.integers(2, 6), st.integers(1, 4),
+       st.lists(st.floats(0.05, 1.0), min_size=6, max_size=6),
+       st.lists(st.floats(0.0, 1.5), min_size=6, max_size=6))
+def test_alloc_never_exceeds_total_or_cap(T, q, accs, fracs):
+    cfg = EnergyAllocConfig(e_total=500.0, warmup_q=q)
+    stt = energy_alloc.init_alloc(cfg, T)
+    accs = jnp.asarray(accs[:T])
+    fracs = np.asarray(fracs[:T])
+    for m in range(8):
+        consumed = jnp.asarray(fracs * np.asarray(stt.budgets))
+        stt, _ = energy_alloc.step(stt, cfg, consumed, accs)
+        assert float(jnp.sum(stt.budgets)) <= cfg.e_total * 1.001
+        assert float(jnp.max(stt.budgets)) <= \
+            cfg.task_cap_frac * cfg.e_total * 1.001
+        assert float(jnp.min(stt.budgets)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint roundtrip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_checkpoint_roundtrip_random_trees(seed):
+    from repro.checkpoint import save_pytree, load_pytree
+    import tempfile, os
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "nested": {"b": rng.integers(0, 10, size=(5,)),
+                   "c": [rng.normal(size=(2,)), rng.normal(size=(1, 1))]},
+        "none": None,
+        "scalar": np.float32(rng.normal()),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.npz")
+        save_pytree(p, tree)
+        back = load_pytree(p)
+    assert np.allclose(np.asarray(back["a"]), tree["a"])
+    assert np.allclose(np.asarray(back["nested"]["c"][0]),
+                       tree["nested"]["c"][0])
+    assert back["none"] is None
+    assert isinstance(back["nested"]["c"], list) or isinstance(
+        back["nested"]["c"], tuple)
