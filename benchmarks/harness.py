@@ -80,3 +80,25 @@ def save_json(name: str, obj: Any) -> str:
     with open(path, "w") as f:
         json.dump(obj, f, indent=2)
     return path
+
+
+def save_bench_json(bench: str, payload: Dict[str, Any]) -> str:
+    """Machine-readable benchmark record (`BENCH_<name>.json`).
+
+    CI archives these as artifacts so the perf trajectory (e.g. the round
+    engine's serial/batched speedup) is tracked across PRs. The envelope
+    carries enough host metadata to interpret absolute numbers.
+    """
+    import platform
+
+    envelope = {
+        "bench": bench,
+        "unix_time": int(time.time()),
+        "host": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "cpus": os.cpu_count(),
+        },
+        **payload,
+    }
+    return save_json(f"BENCH_{bench}.json", envelope)

@@ -1,0 +1,195 @@
+"""Round-engine throughput benchmark: seed serial loop vs current serial
+loop vs batched vmap×scan engine.
+
+Three configurations are measured per fleet size, each with fully
+precompiled jit caches (both trainers expose `warmup()`; no compile time
+pollutes any side):
+
+  - ``serial_seed`` — the per-vehicle `LocalTrainer` loop running the
+    seed's blocked online-softmax flash-attention path (the baseline this
+    engine work replaced; forced via `runmode.set_direct_attn_max_seq(0)`);
+  - ``serial``      — the same loop with the current short-sequence direct
+    attention path (this PR's model-level optimization, shared by both
+    engines);
+  - ``batched``     — the batched round engine: per-rank vmap×scan group
+    programs, stacked uploads, grouped aggregation.
+
+Reported per engine:
+  - engine throughput: vehicle-trainings/sec through the local fine-tuning
+    phase (`_train_plans`) — the code the batched engine replaces;
+  - whole-round wall time (includes the engine-independent §III-C
+    accounting, SVD redistribution and global eval).
+
+Speedup rows give the batched engine's train-phase ratio vs both serial
+variants. The acceptance target (≥3× at 24 vehicles on CPU) is measured
+against ``serial_seed`` — the loop as it existed before this engine. The
+contemporary ``serial`` comparison is reported alongside: on a 2-core CPU,
+XLA executes batched tiny ops as loops, so against the *also-optimized*
+serial loop the batched engine wins mainly by amortizing per-vehicle
+dispatch/Python overhead (~1–2× depending on arch and fleet).
+
+`--arch fleet` benchmarks the fleet-scale backbone
+(`configs.vit_base_paper.fleet`) — the per-vehicle workload for scaling to
+hundreds of vehicles; default is the simulator's reduced ViT backbone.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.round_engine \
+        [--full] [--smoke] [--arch reduced|fleet]
+
+Emits a CSV block and writes machine-readable results to
+benchmarks/results/BENCH_round_engine.json for the CI perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+FULL_RANKS = (2, 4, 8, 16, 32)
+SMOKE_RANKS = (4, 8)           # fewer programs to precompile (<2 min CI)
+
+ENGINES = ("serial_seed", "serial", "batched")
+
+
+def _sim(engine: str, vehicles: int, rounds: int, arch: str, ranks,
+         seed: int = 0):
+    from repro.config import LoRAConfig
+    from repro.configs import vit_base_paper
+    from repro.sim.simulator import IoVSimulator, SimConfig
+    if arch == "fleet":
+        train_arch, batch_size = vit_base_paper.fleet(), 4
+    else:
+        train_arch, batch_size = None, 10   # simulator default (reduced)
+    return IoVSimulator(SimConfig(
+        method="ours", rounds=rounds, num_vehicles=vehicles,
+        num_tasks=2, local_steps=3, seed=seed,
+        engine="serial" if engine == "serial_seed" else engine,
+        train_arch=train_arch, batch_size=batch_size,
+        lora=LoRAConfig(rank=8, max_rank=32, candidate_ranks=tuple(ranks))))
+
+
+_TRAINERS: Dict[str, Any] = {}   # engine → warmed trainer (jit caches are
+                                 # fleet-size-independent: reuse across Vs)
+
+
+def bench_engine(engine: str, vehicles: int, *, arch: str, ranks,
+                 settle: int, measure: int) -> Dict[str, float]:
+    """Precompile all engine programs, settle, then time `measure` rounds."""
+    from repro.models import runmode
+    from repro.sim.simulator import IoVSimulator
+
+    train_s = {"t": 0.0}
+    orig = IoVSimulator._train_plans
+
+    def timed(self, plans):
+        t0 = time.time()
+        out = orig(self, plans)
+        train_s["t"] += time.time() - t0
+        return out
+
+    IoVSimulator._train_plans = timed
+    saved_direct = runmode.DIRECT_ATTN_MAX_SEQ
+    if engine == "serial_seed":
+        runmode.set_direct_attn_max_seq(0)   # the seed's attention path
+    try:
+        sim = _sim(engine, vehicles, settle + measure, arch, ranks)
+        example = {k: v[:sim.cfg.batch_size]
+                   for k, v in sim.eval_batches[0].items()}
+        attr = "batched_trainer" if engine == "batched" else "trainer"
+        if engine in _TRAINERS:
+            setattr(sim, attr, _TRAINERS[engine])
+        trainer = getattr(sim, attr)
+        trainer.warmup(sim.params, ranks, example,
+                       eval_batch=sim.local_eval[0])
+        _TRAINERS[engine] = trainer
+        sim.run(rounds=settle)
+        train_s["t"] = 0.0
+        t0 = time.time()
+        sim.run(rounds=measure)
+        total = time.time() - t0
+    finally:
+        IoVSimulator._train_plans = orig
+        runmode.set_direct_attn_max_seq(saved_direct)
+    trained = sum(sum(t["active"] for t in r["tasks"])
+                  for r in sim.history[settle:])
+    return {
+        "engine": engine,
+        "vehicles": vehicles,
+        "rounds": measure,
+        "compiled_programs": trainer.num_compiled(),
+        "vehicle_trainings": trained,
+        "train_s_per_round": train_s["t"] / measure,
+        "round_s": total / measure,
+        "train_vehicles_per_s": trained / max(train_s["t"], 1e-9),
+        "round_vehicles_per_s": trained / max(total, 1e-9),
+    }
+
+
+def main(full: bool = False, smoke: bool = False, arch: str = "reduced"
+         ) -> Dict[str, Any]:
+    from benchmarks.harness import emit_csv, save_bench_json
+
+    if smoke:
+        fleets, settle, meas, ranks = [8], 2, 2, SMOKE_RANKS
+    elif full:
+        fleets, settle, meas, ranks = [8, 24, 48], 3, 6, FULL_RANKS
+    else:
+        fleets, settle, meas, ranks = [8, 24], 3, 6, FULL_RANKS
+
+    rows: List[Dict[str, Any]] = []
+    by_key: Dict[tuple, Dict[str, float]] = {}
+    for vehicles in fleets:
+        for engine in ENGINES:
+            r = bench_engine(engine, vehicles, arch=arch, ranks=ranks,
+                             settle=settle, measure=meas)
+            by_key[(engine, vehicles)] = r
+            rows.append(dict(r, name=f"{engine}_v{vehicles}"))
+
+    speedups = {}
+    for vehicles in fleets:
+        b = by_key[("batched", vehicles)]
+        ss = by_key[("serial_seed", vehicles)]
+        s = by_key[("serial", vehicles)]
+        speedups[str(vehicles)] = {
+            "train_vs_seed": round(ss["train_s_per_round"]
+                                   / max(b["train_s_per_round"], 1e-9), 2),
+            "train_vs_serial": round(s["train_s_per_round"]
+                                     / max(b["train_s_per_round"], 1e-9), 2),
+            "round_vs_seed": round(ss["round_s"]
+                                   / max(b["round_s"], 1e-9), 2),
+        }
+        sp = speedups[str(vehicles)]
+        # ratio columns line up with the quantity they describe:
+        # train column ↔ train-phase ratios, round column ↔ round ratio
+        rows.append({"name": f"speedup_v{vehicles}",
+                     "train_s_per_round":
+                         f"train_vs_seed={sp['train_vs_seed']}",
+                     "round_s": f"round_vs_seed={sp['round_vs_seed']}",
+                     "train_vehicles_per_s":
+                         f"train_vs_serial={sp['train_vs_serial']}",
+                     "round_vehicles_per_s": ""})
+
+    emit_csv(f"round_engine [{arch} arch] "
+             "(seed serial vs current serial vs batched)",
+             rows, ["train_s_per_round", "round_s",
+                    "train_vehicles_per_s", "round_vehicles_per_s"])
+    out = {"results": [r for r in rows if "engine" in r],
+           "speedups": speedups,
+           "config": {"arch": arch, "fleets": fleets,
+                      "measure_rounds": meas, "candidate_ranks": list(ranks),
+                      "smoke": smoke, "full": full}}
+    path = save_bench_json("round_engine", out)
+    print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI run: one fleet size, 2 measured rounds")
+    p.add_argument("--arch", choices=("reduced", "fleet"), default="reduced")
+    a = p.parse_args()
+    main(full=a.full, smoke=a.smoke, arch=a.arch)

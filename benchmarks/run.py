@@ -1,10 +1,12 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only table1,...]
 
 Emits CSV blocks per experiment (name,value columns) and caches simulator
-runs under benchmarks/results/. Reduced scale by default (1-core CPU);
---full switches to paper-scale settings.
+runs under benchmarks/results/. Reduced scale by default (CPU container);
+--full switches to paper-scale settings; --smoke runs only a tiny
+round-engine throughput check (the CI perf canary, <2 min) and writes
+benchmarks/results/BENCH_round_engine.json.
 """
 from __future__ import annotations
 
@@ -16,14 +18,22 @@ import time
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--full", action="store_true")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI canary: tiny round_engine run only")
     parser.add_argument("--only", default="",
                         help="comma-separated benchmark names")
     args = parser.parse_args()
 
+    if args.smoke:
+        from benchmarks import round_engine
+        round_engine.main(smoke=True)
+        return
+
     from benchmarks import (fig2_rank_impact, fig4_convergence, fig7_memory,
                             fig9_10_scalability, roofline_report,
-                            table1_methods, table2_tasks, table3_ablation,
-                            theorem1_regret)
+                            round_engine, table1_methods, table2_tasks,
+                            table3_ablation, theorem1_regret)
+
     benches = {
         "table1": table1_methods.main,
         "table2": table2_tasks.main,
@@ -34,6 +44,7 @@ def main() -> None:
         "fig9_10": fig9_10_scalability.main,
         "theorem1": theorem1_regret.main,
         "roofline": roofline_report.main,
+        "round_engine": round_engine.main,
     }
     only = [b for b in args.only.split(",") if b]
     t0 = time.time()
@@ -44,7 +55,7 @@ def main() -> None:
         t = time.time()
         try:
             fn(full=args.full)
-        except Exception as e:
+        except Exception:
             import traceback
             traceback.print_exc()
             failed.append(name)

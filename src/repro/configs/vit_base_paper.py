@@ -30,3 +30,14 @@ def reduced() -> ModelConfig:
     return vit_base_paper().with_overrides(
         name="vit-tiny-paper", num_layers=2, d_model=64, num_heads=4,
         num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=64)
+
+
+def fleet() -> ModelConfig:
+    """Fleet-scale variant: the per-vehicle workload for CPU simulations of
+    very large fleets (ROADMAP: hundreds of vehicles × methods × seeds).
+    Small enough that per-vehicle activations stay cache-resident, which is
+    the regime where the batched round engine's vmap amortizes XLA-CPU op
+    overhead (benchmarks/round_engine.py)."""
+    return vit_base_paper().with_overrides(
+        name="vit-fleet-paper", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)

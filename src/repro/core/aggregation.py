@@ -136,6 +136,122 @@ def tree_paths_delta(tree: Any) -> List[Tuple]:
 
 
 # ---------------------------------------------------------------------------
+# Stacked (vehicle-axis) aggregation — consumed by the batched round engine.
+# Each group stacks the adapters of all same-rank clients on a leading
+# vehicle axis, so the server merges a whole rank group with one batched
+# einsum per LoRA target instead of a per-client Python loop.
+# ---------------------------------------------------------------------------
+
+def _skeleton(stacked: Any) -> Any:
+    """Client-0 view of a stacked tree (structure donor for tree_set)."""
+    return jax.tree_util.tree_map(lambda x: x[0], stacked)
+
+
+def _wvec(w, ndim: int) -> jnp.ndarray:
+    w = jnp.asarray(w, jnp.float32)
+    return w.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _group_weight_norm(groups: Sequence[Tuple[Any, Any]]) -> jnp.ndarray:
+    return jnp.maximum(
+        sum(jnp.sum(jnp.asarray(w, jnp.float32)) for _, w in groups), 1e-12)
+
+
+def aggregate_merged_grouped(groups: Sequence[Tuple[Any, Any]],
+                             scale: float) -> Any:
+    """Merged-delta aggregation over stacked per-rank groups.
+
+    groups: [(stacked_adapters, weights)] — stacked trees carry a leading
+    vehicle axis (n_g, ...); weights are (n_g,). Numerically equivalent (up
+    to float reassociation) to :func:`aggregate_merged` over the
+    concatenated client list, but each group contracts its whole vehicle
+    axis in one einsum.
+    """
+    assert groups
+    wsum = _group_weight_norm(groups)
+    paths = tree_paths(_skeleton(groups[0][0]))
+    out = _skeleton(groups[0][0])
+    for path in paths:
+        delta = None
+        for stacked, w in groups:
+            ad = tree_get(stacked, path)
+            a = ad["a"].astype(jnp.float32) * _wvec(
+                jnp.asarray(w, jnp.float32) / wsum, ad["a"].ndim)
+            d = scale * jnp.einsum("v...ir,v...ro->...io", a,
+                                   ad["b"].astype(jnp.float32))
+            delta = d if delta is None else delta + d
+        out = tree_set(out, path, {"delta": delta})
+    return out
+
+
+def average_stacked_grouped(groups: Sequence[Tuple[Any, Any]]) -> Any:
+    """Data-weighted mean of stacked adapter trees (HomoLoRA's rule) —
+    all clients share one rank, so the mean is a single vectorized sum."""
+    assert groups
+    wsum = _group_weight_norm(groups)
+    acc = None
+    for stacked, w in groups:
+        part = jax.tree_util.tree_map(
+            lambda x: jnp.sum(
+                x.astype(jnp.float32) * _wvec(
+                    jnp.asarray(w, jnp.float32) / wsum, x.ndim), axis=0),
+            stacked)
+        acc = part if acc is None else jax.tree_util.tree_map(
+            jnp.add, acc, part)
+    return acc
+
+
+def aggregate_hetlora_grouped(groups: Sequence[Tuple[Any, Any]],
+                              max_rank: int) -> Any:
+    """HetLoRA zero-padding aggregation over stacked per-rank groups."""
+    assert groups
+    wsum = _group_weight_norm(groups)
+    paths = tree_paths(_skeleton(groups[0][0]))
+    out = _skeleton(groups[0][0])
+    for path in paths:
+        acc_a = acc_b = None
+        for stacked, w in groups:
+            ad = tree_get(stacked, path)
+            r = ad["a"].shape[-1]
+            wn = jnp.asarray(w, jnp.float32) / wsum
+            pad_a = [(0, 0)] * (ad["a"].ndim - 1) + [(0, max_rank - r)]
+            pad_b = ([(0, 0)] * (ad["b"].ndim - 2)
+                     + [(0, max_rank - r)] + [(0, 0)])
+            a = jnp.sum(jnp.pad(ad["a"].astype(jnp.float32), pad_a)
+                        * _wvec(wn, ad["a"].ndim), axis=0)
+            b = jnp.sum(jnp.pad(ad["b"].astype(jnp.float32), pad_b)
+                        * _wvec(wn, ad["b"].ndim), axis=0)
+            acc_a = a if acc_a is None else acc_a + a
+            acc_b = b if acc_b is None else acc_b + b
+        out = tree_set(out, path, {"a": acc_a, "b": acc_b})
+    return out
+
+
+def aggregate_fedra_stacked(stacked: Any, weights: Any,
+                            masks: jnp.ndarray) -> Any:
+    """FedRA per-layer weighted average, vectorized over the vehicle axis.
+
+    stacked: adapter tree with leading (V,) axis; masks: (V, L) layer
+    multipliers; weights: (V,). Equivalent to :func:`aggregate_fedra`.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    masks = jnp.asarray(masks, jnp.float32)
+    paths = tree_paths(_skeleton(stacked))
+    out = _skeleton(stacked)
+    den = jnp.maximum(jnp.sum(masks * w[:, None], axis=0), 1e-12)  # (L,)
+    for path in paths:
+        ad = tree_get(stacked, path)
+        mm = masks.reshape(masks.shape + (1,) * (ad["a"].ndim - 2))
+        num_a = jnp.sum(ad["a"].astype(jnp.float32) * mm
+                        * _wvec(w, ad["a"].ndim), axis=0)
+        num_b = jnp.sum(ad["b"].astype(jnp.float32) * mm
+                        * _wvec(w, ad["b"].ndim), axis=0)
+        da = den.reshape((den.shape[0],) + (1,) * (num_a.ndim - 1))
+        out = tree_set(out, path, {"a": num_a / da, "b": num_b / da})
+    return out
+
+
+# ---------------------------------------------------------------------------
 # HetLoRA (Cho et al., 2024): zero-padding aggregation + self-pruning
 # ---------------------------------------------------------------------------
 

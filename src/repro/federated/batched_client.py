@@ -1,0 +1,427 @@
+"""Batched, jit-compiled local fine-tuning engine.
+
+The serial path (`LocalTrainer`) dispatches one jitted step per vehicle per
+local step — at 24 vehicles × 3 steps × 3 tasks that is ~200 XLA dispatches
+per round plus per-vehicle Python bookkeeping, which dominates on the
+reduced CPU models. This module groups the active vehicles of one task
+round by their selected LoRA rank (ranks come from the small candidate set
+φ_η), stacks each group's adapter pytrees / data batches on a leading
+vehicle axis, and runs
+
+    jax.vmap  over the vehicle axis   (one batched op per model op)
+    jax.lax.scan over local steps     (one compiled step program)
+
+in a single donated-buffer jit per (rank, group-bucket) — a whole rank
+group's local training, including the held-out eval, is one XLA call.
+Results stay *stacked*: the simulator hands the stacked groups straight to
+the server's grouped aggregation, so no per-vehicle unstack/restack ops
+appear anywhere on the batched path.
+
+Heterogeneous step counts (§IV-E departing vehicles fine-tune a reduced
+number of steps) are handled inside the scan with a per-vehicle step mask:
+every vehicle scans `max_steps` iterations but updates are frozen once its
+own step budget is exhausted, which reproduces the serial dynamics exactly.
+
+Group sizes vary per round (mobility), so groups are padded up to small
+buckets (powers of two below 8, then multiples of 4) to bound
+recompilation while keeping dead padded lanes under a third of the batch.
+
+Independent groups (different ranks, different tasks) are dispatched
+concurrently on a small thread pool: XLA-CPU executes one program's tiny
+ops serially, so overlapping two programs is what actually uses the second
+core (measured ~1.4× on the 2-core container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.data.pipeline import ClientDataset
+from repro.models import transformer as T
+from repro.optim import adam, apply_updates
+
+
+def draw_batches(dataset: ClientDataset, n_steps: int, pad_to: int
+                 ) -> Dict[str, np.ndarray]:
+    """Draw `n_steps` batches from the vehicle's shard (consuming exactly the
+    same RNG stream as the serial trainer would) and pad to `pad_to` steps by
+    repeating the last batch — padded steps are masked out inside the scan.
+
+    Returns {"tokens": (pad_to, B, S), "labels": (pad_to, B)}.
+    """
+    assert 1 <= n_steps <= pad_to
+    bs = [dataset.next_batch() for _ in range(n_steps)]
+    while len(bs) < pad_to:
+        bs.append(bs[-1])
+    return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+
+
+def stack_trees(trees: Sequence[Any]) -> Any:
+    """Stack identical-structure pytrees on a new leading (vehicle) axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree: Any, n: int) -> List[Any]:
+    """Inverse of :func:`stack_trees` (first `n` lanes)."""
+    return [jax.tree_util.tree_map(lambda x: x[i], tree) for i in range(n)]
+
+
+def take_lanes(tree: Any, lanes: Sequence[int]) -> Any:
+    """Gather a subset of vehicle lanes from a stacked tree (one op/leaf)."""
+    idx = jnp.asarray(np.asarray(lanes, np.int32))
+    return jax.tree_util.tree_map(lambda x: x[idx], tree)
+
+
+# Widest vmap lane count per compiled program. Groups larger than this are
+# split into chunks at dispatch time: per-vehicle XLA-CPU cost is flat in
+# the vmap width (batched tiny GEMMs execute as loops), so wider programs
+# buy nothing — while chunking keeps the jit-cache key space CONSTANT in
+# fleet size ({1,2,4,8} buckets × |φ_η| ranks) and lets chunks of one big
+# group overlap on the dispatch thread pool.
+MAX_GROUP = 8
+
+
+def _bucket(n: int) -> int:
+    """Smallest power-of-two bucket ≥ n (n ≤ MAX_GROUP): bounds the jit
+    cache over group sizes with ≤ min(n, 3) dead padded lanes — padding is
+    real compute on CPU, unlike accelerators."""
+    assert n <= MAX_GROUP
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def _concat_chunks(parts: Sequence[Tuple[Any, Dict[str, np.ndarray]]]
+                   ) -> Tuple[Any, Dict[str, np.ndarray]]:
+    """Reassemble chunked finetune_group_stacked results in order."""
+    if len(parts) == 1:
+        return parts[0]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs), *[p[0] for p in parts])
+    metrics = {k: np.concatenate([p[1][k] for p in parts])
+               for k in parts[0][1]}
+    return stacked, metrics
+
+
+class BatchedLocalTrainer:
+    """Group counterpart of :class:`LocalTrainer`.
+
+    Compiles one program per (rank, vehicle-bucket): vmap over vehicles,
+    scan over local steps, Adam on the adapter pytree only (frozen base),
+    input adapter buffers donated.
+    """
+
+    def __init__(self, cfg: ModelConfig, lora: LoRAConfig, lr: float = 1e-3,
+                 max_steps: int = 1, workers: int = 2):
+        self.cfg = cfg
+        self.lora = lora
+        self.lr = lr
+        self.max_steps = max(int(max_steps), 1)
+        self.opt = adam(lr)
+        self.workers = max(int(workers), 1)
+        self._fns: Dict[Tuple[int, int, bool, bool], Any] = {}
+        self._fns_lock = threading.Lock()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._ones_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
+        # id()-keyed caches hold a STRONG reference to the key object and
+        # verify identity on lookup — a bare id() key could be recycled by
+        # a later allocation and silently serve another object's data
+        self._eval_cache: Dict[Tuple[int, int],
+                               Tuple[Any, Dict[str, jnp.ndarray]]] = {}
+        # Chunks are round-robined over the host's CPU devices: two XLA
+        # executions only truly overlap on separate devices (a single
+        # device's runtime serializes programs). Default is one device;
+        # benchmarks/round_engine.py opts into 2 via
+        # --xla_force_host_platform_device_count (its own process only).
+        self._devices = ([d for d in jax.devices()
+                          if d.platform == "cpu"] or jax.devices())
+        self._params_dev: Dict[Tuple[int, int], Tuple[Any, Any]] = {}
+
+    # ------------------------------------------------------------------
+    def _lora_at(self, rank: int) -> LoRAConfig:
+        return dataclasses.replace(self.lora, rank=rank)
+
+    def _group_fn(self, rank: int, vpad: int, with_eval: bool,
+                  shared: bool = False):
+        """shared=True: all lanes start from the SAME adapter tree (the
+        normal case — the server distributes one tree per rank), passed
+        unstacked and broadcast inside the program (in_axes=None). That
+        removes the per-leaf host-side stacking that otherwise dominates
+        small-group dispatch. shared=False takes a stacked (V, ...) tree
+        with the input buffer donated."""
+        key = (rank, vpad, with_eval, shared)
+        with self._fns_lock:
+            if key in self._fns:
+                return self._fns[key]
+        cfg, opt, lora_r = self.cfg, self.opt, self._lora_at(rank)
+        n_steps = self.max_steps
+
+        def one_vehicle(params, adapters, batches, layer_mask, n_active):
+            """batches: {(S, B, ...)} stacked per-step; n_active: () int32."""
+            opt_state = opt.init(adapters)
+
+            def body(carry, xs):
+                ad, ost = carry
+                batch, si = xs
+
+                def loss(a):
+                    return T.loss_fn(params, a, cfg, lora_r, batch)
+
+                (_, metrics), grads = jax.value_and_grad(
+                    loss, has_aux=True)(ad)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g * layer_mask.reshape(
+                        (-1,) + (1,) * (g.ndim - 1)), grads)
+                updates, new_ost = opt.update(grads, ost, ad)
+                new_ad = apply_updates(ad, updates)
+                live = si < n_active   # freeze past the vehicle's budget
+                ad = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(live, n, o), new_ad, ad)
+                ost = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(live, n, o), new_ost, ost)
+                return (ad, ost), metrics
+
+            (adapters, _), ms = jax.lax.scan(
+                body, (adapters, opt_state),
+                (batches, jnp.arange(n_steps, dtype=jnp.int32)))
+            # serial semantics: report the last *active* step's metrics
+            last_idx = jnp.maximum(n_active - 1, 0)
+            last = jax.tree_util.tree_map(lambda x: x[last_idx], ms)
+            return adapters, last
+
+        ad_axis = None if shared else 0
+
+        def run_impl(params, adapters, batches, layer_masks, step_counts,
+                     eval_batch):
+            new_ads, last = jax.vmap(
+                one_vehicle, in_axes=(None, ad_axis, 0, 0, 0))(
+                    params, adapters, batches, layer_masks, step_counts)
+            out = {"train": last}
+            if with_eval:
+                def ev(ad):
+                    _, m = T.loss_fn(params, ad, cfg, lora_r, eval_batch)
+                    return m
+                out["eval"] = jax.vmap(ev)(new_ads)
+            return new_ads, out
+
+        if shared:
+            # never donate: the shared tree is the server's live state,
+            # reused across vehicles and rounds
+            run = jax.jit(run_impl)
+        else:
+            run = jax.jit(run_impl, donate_argnums=(1,))
+
+        with self._fns_lock:
+            self._fns.setdefault(key, run)
+            return self._fns[key]
+
+    # ------------------------------------------------------------------
+    def _params_on(self, params, dev):
+        key = (id(params), dev.id)
+        hit = self._params_dev.get(key)
+        if hit is not None and hit[0] is params:
+            return hit[1]
+        out = jax.device_put(params, dev)
+        if len(self._params_dev) > 16:   # bound growth across sims
+            self._params_dev.clear()
+        self._params_dev[key] = (params, out)
+        return out
+
+    def finetune_group_stacked(self, params, adapters_list: Sequence[Any],
+                               batches_list: Sequence[Dict[str, np.ndarray]],
+                               step_counts: Sequence[int],
+                               eval_batch: Optional[Dict] = None,
+                               layer_masks: Optional[Sequence] = None,
+                               device=None
+                               ) -> Tuple[Any, Dict[str, np.ndarray]]:
+        """Train one rank group in a single compiled call; results stacked.
+
+        adapters_list: per-vehicle adapter trees, all at the same rank.
+        batches_list: per-vehicle stacked step batches from
+            :func:`draw_batches` — shapes (max_steps, B, ...).
+        step_counts: per-vehicle number of *active* local steps
+            (≤ max_steps; departing vehicles train fewer).
+        Returns (stacked_adapters (n, ...), metrics) where metrics values
+        are (n,) numpy arrays — last-step train metrics plus
+        "eval_accuracy" when eval_batch is given.
+        """
+        n = len(adapters_list)
+        assert n == len(batches_list) == len(step_counts) and n > 0
+        if n > MAX_GROUP:
+            # split into MAX_GROUP chunks and concatenate the stacked
+            # results (callers that want chunk-level parallelism should go
+            # through run_jobs, which expands chunks onto the thread pool)
+            parts = [self.finetune_group_stacked(
+                params, adapters_list[o:o + MAX_GROUP],
+                batches_list[o:o + MAX_GROUP], step_counts[o:o + MAX_GROUP],
+                eval_batch=eval_batch,
+                layer_masks=(None if layer_masks is None
+                             else layer_masks[o:o + MAX_GROUP]),
+                device=device)
+                for o in range(0, n, MAX_GROUP)]
+            return _concat_chunks(parts)
+        from repro.core.lora import tree_rank
+        rank = tree_rank(adapters_list[0])
+        vpad = _bucket(n)
+
+        dev = device if device is not None else self._devices[0]
+        home = self._devices[0]
+        off_home = dev.id != home.id
+        shared = all(ad is adapters_list[0] for ad in adapters_list)
+        with jax.default_device(dev):
+            if shared:
+                adapters_in = adapters_list[0]
+            else:
+                adapters_in = stack_trees(list(adapters_list)
+                                          + [adapters_list[0]] * (vpad - n))
+            # ALWAYS commit params/adapters to the target device: committed
+            # vs uncommitted placement is part of the jit cache key, and
+            # commitment propagates through server state (aggregation
+            # outputs moved home) — without this, warmed programs miss the
+            # cache and every round recompiles
+            params = self._params_on(params, dev)
+            adapters_in = jax.device_put(adapters_in, dev)
+            batches = {k: jnp.asarray(np.stack(
+                [b[k] for b in batches_list]
+                + [batches_list[0][k]] * (vpad - n)))
+                for k in batches_list[0]}
+            counts = jnp.asarray(list(step_counts) + [0] * (vpad - n),
+                                 jnp.int32)
+            if layer_masks is None or all(m is None for m in layer_masks):
+                mkey = (vpad, dev.id)
+                if mkey not in self._ones_masks:
+                    self._ones_masks[mkey] = jnp.ones(
+                        (vpad, self.cfg.num_layers), jnp.float32)
+                masks = self._ones_masks[mkey]
+            else:
+                rows = [np.asarray(m, np.float32) if m is not None
+                        else np.ones((self.cfg.num_layers,), np.float32)
+                        for m in layer_masks]
+                masks = jnp.asarray(np.stack(rows + [rows[0]] * (vpad - n)))
+            if eval_batch is None:
+                ev = {"tokens": jnp.zeros((1, 1), jnp.int32),
+                      "labels": jnp.zeros((1,), jnp.int32)}
+            else:
+                # same eval dict every round per task → convert once
+                ekey = (id(eval_batch), dev.id)
+                hit = self._eval_cache.get(ekey)
+                if hit is not None and hit[0] is eval_batch:
+                    ev = hit[1]
+                else:
+                    ev = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+                    if len(self._eval_cache) > 64:
+                        self._eval_cache.clear()
+                    self._eval_cache[ekey] = (eval_batch, ev)
+
+            run = self._group_fn(rank, vpad, eval_batch is not None,
+                                 shared=shared)
+            new_stacked, metrics = run(params, adapters_in, batches, masks,
+                                       counts, ev)
+        if off_home:
+            # downstream (gather, concat, aggregation) mixes groups — they
+            # must share one device
+            new_stacked = jax.device_put(new_stacked, home)
+
+        if vpad != n:
+            new_stacked = jax.tree_util.tree_map(lambda x: x[:n], new_stacked)
+        out = {k: np.asarray(v)[:n] for k, v in metrics["train"].items()}
+        if "eval" in metrics:
+            out["eval_accuracy"] = np.asarray(
+                metrics["eval"]["accuracy"])[:n]
+        return new_stacked, out
+
+    # ------------------------------------------------------------------
+    def finetune_group(self, params, adapters_list: Sequence[Any],
+                       batches_list: Sequence[Dict[str, np.ndarray]],
+                       step_counts: Sequence[int],
+                       eval_batch: Optional[Dict] = None,
+                       layer_masks: Optional[Sequence] = None
+                       ) -> Tuple[List[Any], List[Dict[str, float]]]:
+        """List-in/list-out convenience wrapper (equivalence tests). Metrics
+        floats match LocalTrainer.finetune's dict per vehicle."""
+        stacked, marr = self.finetune_group_stacked(
+            params, adapters_list, batches_list, step_counts,
+            eval_batch=eval_batch, layer_masks=layer_masks)
+        n = len(adapters_list)
+        new_ads = unstack_tree(stacked, n)
+        out_metrics = [{k: float(v[i]) for k, v in marr.items()}
+                       for i in range(n)]
+        return new_ads, out_metrics
+
+    # ------------------------------------------------------------------
+    def run_jobs(self, params, jobs: Sequence[Dict[str, Any]]
+                 ) -> List[Tuple[Any, Dict[str, np.ndarray]]]:
+        """Run independent group jobs, overlapping XLA executions on a small
+        thread pool (different tasks / rank groups share no state).
+
+        jobs: dicts with keys adapters_list, batches_list, step_counts and
+        optional eval_batch, layer_masks. Returns results in job order.
+        """
+        # expand oversize groups into MAX_GROUP chunks so chunks of one big
+        # group also overlap on the pool
+        chunks: List[Dict[str, Any]] = []
+        owners: List[int] = []
+        for ji, job in enumerate(jobs):
+            n = len(job["adapters_list"])
+            lm = job.get("layer_masks")
+            for o in range(0, n, MAX_GROUP):
+                chunks.append({
+                    "adapters_list": job["adapters_list"][o:o + MAX_GROUP],
+                    "batches_list": job["batches_list"][o:o + MAX_GROUP],
+                    "step_counts": job["step_counts"][o:o + MAX_GROUP],
+                    "eval_batch": job.get("eval_batch"),
+                    "layer_masks": None if lm is None else lm[o:o + MAX_GROUP],
+                })
+                owners.append(ji)
+
+        ndev = len(self._devices)
+
+        def one(ci_job):
+            ci, job = ci_job
+            return self.finetune_group_stacked(
+                params, job["adapters_list"], job["batches_list"],
+                job["step_counts"], eval_batch=job.get("eval_batch"),
+                layer_masks=job.get("layer_masks"),
+                device=self._devices[ci % ndev])
+
+        if self.workers <= 1 or len(chunks) <= 1:
+            outs = [one(c) for c in enumerate(chunks)]
+        else:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(max_workers=self.workers)
+            outs = list(self._pool.map(one, enumerate(chunks)))
+
+        results: List[Tuple[Any, Dict[str, np.ndarray]]] = []
+        for ji in range(len(jobs)):
+            parts = [outs[ci] for ci, o in enumerate(owners) if o == ji]
+            results.append(_concat_chunks(parts))
+        return results
+
+    # ------------------------------------------------------------------
+    def num_compiled(self) -> int:
+        return len(self._fns)
+
+    def warmup(self, params, ranks, example_batch: Dict[str, np.ndarray],
+               eval_batch: Optional[Dict] = None) -> None:
+        """Precompile every (rank, bucket) program — the key space is
+        constant in fleet size ({1,2,4,8} buckets per candidate rank), so
+        steady-state rounds never compile."""
+        steps = self.max_steps
+        batches = {k: np.stack([np.asarray(v)] * steps)
+                   for k, v in example_batch.items()}
+        for r in ranks:
+            ad = T.init_adapters(jax.random.PRNGKey(0), self.cfg, self.lora,
+                                 rank=r)
+            b = 1
+            while b <= MAX_GROUP:
+                for dev in self._devices:   # chunks round-robin devices
+                    self.finetune_group_stacked(
+                        params, [ad] * b, [batches] * b, [steps] * b,
+                        eval_batch=eval_batch, device=dev)
+                b *= 2

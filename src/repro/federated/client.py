@@ -5,7 +5,7 @@ convergence horizons, recorded in EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,13 +68,16 @@ class LocalTrainer:
         import dataclasses
         return dataclasses.replace(self.lora, rank=rank)
 
-    def finetune(self, params, adapters, dataset: ClientDataset,
+    def finetune(self, params, adapters, dataset: Optional[ClientDataset],
                  steps: int, eval_batch: Optional[Dict] = None,
-                 layer_mask: Optional[np.ndarray] = None
+                 layer_mask: Optional[np.ndarray] = None,
+                 batches: Optional[Sequence[Dict]] = None
                  ) -> Tuple[Any, Dict[str, float]]:
         """Runs `steps` local updates; returns (new_adapters, metrics).
         layer_mask: (L,) multipliers — FedRA trains only its allocated
-        layers."""
+        layers.
+        batches: optional pre-drawn per-step batches (used by the batched
+        engine's equivalence check so both paths see identical data)."""
         from repro.core.lora import tree_rank
         rank = tree_rank(adapters)
         step = self._train_step(rank)
@@ -84,8 +87,8 @@ class LocalTrainer:
         else:
             layer_mask = jnp.asarray(layer_mask, jnp.float32)
         last = {}
-        for _ in range(steps):
-            batch = dataset.next_batch()
+        for si in range(steps):
+            batch = batches[si] if batches is not None else dataset.next_batch()
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             adapters, opt_state, metrics = step(params, adapters, opt_state,
                                                 batch, layer_mask)
@@ -97,6 +100,27 @@ class LocalTrainer:
                    {k: jnp.asarray(v) for k, v in eval_batch.items()})
             out["eval_accuracy"] = float(m["accuracy"])
         return adapters, out
+
+    def num_compiled(self) -> int:
+        """Compiled program count (benchmark warmup stability probe)."""
+        return len(self._steps) + len(self._evals)
+
+    def warmup(self, params, ranks, example_batch: Dict,
+               eval_batch: Optional[Dict] = None) -> None:
+        """Precompile the train/eval programs for every candidate rank so
+        steady-state timings contain no compiles (benchmark fairness)."""
+        import jax.random as jrandom
+        lm = jnp.ones((self.cfg.num_layers,), jnp.float32)
+        batch = {k: jnp.asarray(v) for k, v in example_batch.items()}
+        for r in ranks:
+            ad = T.init_adapters(jrandom.PRNGKey(0), self.cfg, self.lora,
+                                 rank=r)
+            step = self._train_step(r)
+            out = step(params, ad, self.opt.init(ad), batch, lm)
+            if eval_batch is not None:
+                ev = self._eval_fn(r)
+                ev(params, out[0],
+                   {k: jnp.asarray(v) for k, v in eval_batch.items()})
 
     def evaluate(self, params, adapters, batch: Dict) -> Dict[str, float]:
         from repro.core.lora import tree_rank

@@ -19,6 +19,7 @@ import numpy as np
 from repro.config import LoRAConfig, ModelConfig
 from repro.core import aggregation as agg
 from repro.core import lora as lora_lib
+from repro.federated.batched_client import stack_trees as agg_stack
 from repro.models import transformer as T
 
 
@@ -72,8 +73,11 @@ class RSUServer:
         if self.method == "hetlora":
             if self.global_adapters is None:
                 self.global_adapters = self._fresh(self.lora.max_rank)
-            return [agg.hetlora_truncate(self.global_adapters, r)
-                    for r in ranks]
+            # one truncation per unique rank; same-rank clients share the
+            # tree (the batched engine broadcasts shared trees in-program)
+            uniq = {r: agg.hetlora_truncate(self.global_adapters, r)
+                    for r in set(ranks)}
+            return [uniq[r] for r in ranks]
         if self.method == "fedra":
             if self.global_adapters is None:
                 self.global_adapters = self._fresh(self.lora.rank)
@@ -134,6 +138,59 @@ class RSUServer:
             self.global_adapters = agg.aggregate_fedra(
                 client_adapters, weights,
                 [self._seg_masks(m) for m in self._masks])
+        self.round += 1
+
+    # ------------------------------------------------------------------
+    def aggregate_grouped(self, groups: Sequence[Dict[str, Any]]) -> None:
+        """Batched-engine aggregation over stacked per-rank client groups.
+
+        groups: list of dicts
+            adapters: stacked adapter tree with leading (n_g,) vehicle axis
+            weights:  (n_g,) data-size weights
+            masks:    optional (n_g, L) FedRA layer masks
+            indices:  positions of the group's clients within the
+                      distributed list (residual aggregation)
+        Equivalent to :meth:`aggregate` over the concatenated clients, but
+        each rank group is reduced with one vectorized contraction.
+        """
+        if not groups:
+            self.round += 1
+            return
+        pairs = [(g["adapters"], g["weights"]) for g in groups]
+        if self.method == "ours":
+            new_merged = agg.aggregate_merged_grouped(pairs, self.lora.scale)
+            has_idx = all(g.get("indices") is not None for g in groups)
+            if self.residual and self.merged is not None and has_idx:
+                base_pairs = [
+                    (agg_stack([self._distributed[i] for i in g["indices"]]),
+                     g["weights"]) for g in groups]
+                old_part = agg.aggregate_merged_grouped(base_pairs,
+                                                        self.lora.scale)
+                self.merged = jax.tree_util.tree_map(
+                    lambda g_, n, o: g_ + (n - o), self.merged,
+                    new_merged, old_part)
+            else:
+                self.merged = new_merged
+        elif self.method == "homolora":
+            self.global_adapters = agg.average_stacked_grouped(pairs)
+        elif self.method == "hetlora":
+            self.global_adapters = agg.aggregate_hetlora_grouped(
+                pairs, self.lora.max_rank)
+        elif self.method == "fedra":
+            # FedRA runs one uniform rank — concatenate the (single) groups
+            stacked = (pairs[0][0] if len(pairs) == 1 else
+                       jax.tree_util.tree_map(
+                           lambda *xs: jnp.concatenate(xs), *
+                           [p[0] for p in pairs]))
+            weights = np.concatenate(
+                [np.asarray(p[1], np.float32) for p in pairs])
+            masks = np.concatenate(
+                [np.asarray(g["masks"], np.float32) for g in groups])
+            self._masks = [m for m in masks]
+            self.global_adapters = agg.aggregate_fedra_stacked(
+                stacked, weights, jnp.asarray(masks))
+        else:
+            raise ValueError(self.method)
         self.round += 1
 
     def _seg_masks(self, mask: np.ndarray) -> jnp.ndarray:

@@ -52,5 +52,19 @@ def set_fast_decode(v: bool) -> None:
     FAST_DECODE = bool(v)
 
 
+# DIRECT_ATTN_MAX_SEQ: full-sequence attention with Sq,Sk at or below this
+# threshold skips the blocked online-softmax flash path and materializes the
+# (Sq,Sk) scores directly — for short sequences the blocking machinery
+# (kv-block scan + per-block checkpoint recompute in the backward) costs far
+# more than the memory it saves, and its per-block einsums lower to looped
+# tiny batched GEMMs under the round engine's vmap. 0 disables the path.
+DIRECT_ATTN_MAX_SEQ = 64
+
+
+def set_direct_attn_max_seq(n: int) -> None:
+    global DIRECT_ATTN_MAX_SEQ
+    DIRECT_ATTN_MAX_SEQ = int(n)
+
+
 def inner_unroll(n_trips: int) -> int:
     return n_trips if COST_UNROLL else 1

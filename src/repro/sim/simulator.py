@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,8 @@ from repro.core import ucb_dual
 from repro.data import ClientDataset, DEFAULT_TASKS, dirichlet_partition, make_task
 from repro.federated.baselines import (METHODS, capability_ranks,
                                        is_residual, server_method)
+from repro.federated.batched_client import (BatchedLocalTrainer, draw_batches,
+                                            take_lanes)
 from repro.federated.client import LocalTrainer
 from repro.federated.server import RSUServer
 from repro.models import transformer as T
@@ -61,6 +63,11 @@ class SimConfig:
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     departure_fraction: float = 0.5   # fraction of local steps done at exit
     bytes_per_param: int = 4
+    # round engine: "batched" runs each rank group's local fine-tuning as one
+    # vmap×scan jit call and aggregates stacked groups; "serial" is the
+    # per-vehicle reference loop; "batched_check" runs both on identical
+    # data and records the max adapter deviation (self.engine_check_dev).
+    engine: str = "batched"
 
 
 class IoVSimulator:
@@ -77,7 +84,12 @@ class IoVSimulator:
         self.model_cfg = cfg.train_arch
         key = jax.random.PRNGKey(cfg.seed)
         self.params = T.init_params(key, self.model_cfg, dtype=jnp.float32)
+        if cfg.engine not in ("serial", "batched", "batched_check"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
         self.trainer = LocalTrainer(self.model_cfg, cfg.lora, lr=cfg.lr)
+        self.batched_trainer = BatchedLocalTrainer(
+            self.model_cfg, cfg.lora, lr=cfg.lr, max_steps=cfg.local_steps)
+        self.engine_check_dev = 0.0   # batched_check: max |batched − serial|
 
         # --- cost model (full-dimension backbone) ---
         self.cost_cfg = get_arch(cfg.cost_arch_id)
@@ -167,6 +179,20 @@ class IoVSimulator:
 
     # ------------------------------------------------------------------
     def run_round(self) -> Dict[str, Any]:
+        """One communication round, in three phases:
+
+        1. plan   — per task: coverage, rank selection, adapter
+                    distribution, §IV-E step budgets (no training);
+        2. train  — local fine-tuning for every task; the batched engine
+                    dispatches all (task, rank) groups as concurrent
+                    vmap×scan jit calls;
+        3. finish — per task: §III-C cost accounting over the channel,
+                    §IV-E fallbacks, aggregation, global eval, UCB-DUAL.
+
+        The channel fading RNG is consumed only in phase 3, in a fixed
+        per-task, per-vehicle order — so the serial and batched engines see
+        identical randomness (regression-tested).
+        """
         cfg = self.cfg
         self.mobility.step()
         budgets = np.asarray(self.alloc.budgets)
@@ -174,13 +200,10 @@ class IoVSimulator:
         consumed = np.zeros(cfg.num_tasks)
         accuracies = np.zeros(cfg.num_tasks)
 
-        for ti in range(cfg.num_tasks):
-            rsu = self.rsus[ti]
-            active = self.mobility.in_coverage(rsu)
-            ranks, arms = self._select_ranks(ti, active)
-            active_ids = np.where(active)[0]
-            trec = self._run_task_round(ti, rsu, active_ids, ranks, arms,
-                                        budgets[ti])
+        plans = [self._plan_task(ti) for ti in range(cfg.num_tasks)]
+        trains = self._train_plans(plans)
+        for ti, (plan, tr) in enumerate(zip(plans, trains)):
+            trec = self._finish_task(plan, tr, budgets[ti])
             consumed[ti] = trec["energy"]
             accuracies[ti] = trec["accuracy"]
             rec["tasks"].append(trec)
@@ -199,61 +222,197 @@ class IoVSimulator:
         return rec
 
     # ------------------------------------------------------------------
-    def _run_task_round(self, ti: int, rsu, active_ids, ranks, arms,
-                        budget: float) -> Dict[str, Any]:
+    def _plan_task(self, ti: int) -> Dict[str, Any]:
+        """Phase 1: everything a task round needs before training starts."""
         cfg = self.cfg
-        server = self.servers[ti]
-        dists = self.mobility.distances_to(rsu)
+        rsu = self.rsus[ti]
+        active = self.mobility.in_coverage(rsu)
+        ranks, arms = self._select_ranks(ti, active)
+        active_ids = np.where(active)[0]
         departing = (self.mobility.predict_departure(
             rsu, self.mobility.cfg.dt) if len(active_ids) else
             np.zeros(cfg.num_vehicles, bool))
         staying = np.zeros(cfg.num_vehicles, bool)
         staying[active_ids] = True
         staying &= ~departing
-
-        adapters_list = server.distribute([int(ranks[v])
-                                           for v in active_ids])
-        fedra_masks = (server.masks if cfg.method == "fedra" else
+        adapters_list = self.servers[ti].distribute(
+            [int(ranks[v]) for v in active_ids])
+        fedra_masks = (self.servers[ti].masks if cfg.method == "fedra" else
                        [None] * len(active_ids))
-        kept_adapters, kept_weights, kept_masks, kept_idx = [], [], [], []
+        # §IV-E: departing vehicles fine-tune a reduced number of steps
+        steps_list, frac_list = [], []
+        for v in active_ids:
+            if bool(departing[v]):
+                steps_list.append(max(1, int(round(
+                    cfg.local_steps * cfg.departure_fraction))))
+                frac_list.append(cfg.departure_fraction)
+            else:
+                steps_list.append(cfg.local_steps)
+                frac_list.append(1.0)
+        return {"ti": ti, "rsu": rsu, "active_ids": active_ids,
+                "ranks": ranks, "arms": arms, "departing": departing,
+                "staying": staying, "adapters_list": adapters_list,
+                "fedra_masks": fedra_masks, "steps_list": steps_list,
+                "frac_list": frac_list}
+
+    # ------------------------------------------------------------------
+    def _train_serial(self, plan: Dict[str, Any]) -> Dict[str, Any]:
+        """Reference engine: the per-vehicle LocalTrainer loop."""
+        ti = plan["ti"]
+        fm = plan["fedra_masks"]
+        ads: List[Any] = []
+        accs: List[float] = []
+        for i, v in enumerate(plan["active_ids"]):
+            mask = fm[i] if i < len(fm) else None
+            ad, metrics = self.trainer.finetune(
+                self.params, plan["adapters_list"][i],
+                self.client_data[ti][v], plan["steps_list"][i],
+                eval_batch=self.local_eval[ti], layer_mask=mask)
+            ads.append(ad)
+            accs.append(metrics.get("eval_accuracy",
+                                    metrics.get("accuracy", 0.0)))
+        return {"ads_list": ads, "groups": None,
+                "accs": np.asarray(accs, np.float32)}
+
+    # ------------------------------------------------------------------
+    def _train_plans(self, plans: Sequence[Dict[str, Any]]
+                     ) -> List[Dict[str, Any]]:
+        """Phase 2: local fine-tuning for all tasks (engine dispatch).
+
+        serial: the per-vehicle reference loop, task by task.
+        batched: every (task, rank) group becomes one vmap×scan jit job;
+            all jobs run concurrently on the trainer's thread pool and the
+            results stay stacked for grouped aggregation.
+        batched_check: batched, then the serial reference is replayed on
+            the identical pre-drawn batches and the max adapter deviation
+            recorded in self.engine_check_dev.
+        """
+        cfg = self.cfg
+        if cfg.engine == "serial":
+            return [self._train_serial(p) for p in plans]
+
+        results: List[Dict[str, Any]] = []
+        jobs: List[Dict[str, Any]] = []
+        slots: List[Tuple[int, int, List[int]]] = []
+        for pi, plan in enumerate(plans):
+            ti = plan["ti"]
+            n = len(plan["active_ids"])
+            res = {"ads_list": None, "groups": {},
+                   "accs": np.zeros(n, np.float32)}
+            results.append(res)
+            if n == 0:
+                continue
+            # pre-draw every vehicle's batches — identical per-shard RNG
+            # stream as the serial engine
+            batches = [draw_batches(self.client_data[ti][v],
+                                    plan["steps_list"][i], cfg.local_steps)
+                       for i, v in enumerate(plan["active_ids"])]
+            plan["batches"] = batches
+            by_rank: Dict[int, List[int]] = {}
+            for i, v in enumerate(plan["active_ids"]):
+                by_rank.setdefault(int(plan["ranks"][v]), []).append(i)
+            fm = plan["fedra_masks"]
+            for r in sorted(by_rank):
+                idxs = by_rank[r]
+                jobs.append({
+                    "adapters_list": [plan["adapters_list"][i]
+                                      for i in idxs],
+                    "batches_list": [batches[i] for i in idxs],
+                    "step_counts": [plan["steps_list"][i] for i in idxs],
+                    "eval_batch": self.local_eval[ti],
+                    "layer_masks": [fm[i] if i < len(fm) else None
+                                    for i in idxs]})
+                slots.append((pi, r, idxs))
+
+        outs = self.batched_trainer.run_jobs(self.params, jobs)
+        for (pi, r, idxs), (stacked, marr) in zip(slots, outs):
+            res = results[pi]
+            res["groups"][r] = (stacked, idxs)
+            accs = marr.get("eval_accuracy", marr.get("accuracy"))
+            for j, i in enumerate(idxs):
+                res["accs"][i] = accs[j]
+        if cfg.engine == "batched_check":
+            self._check_against_serial(plans, results)
+        return results
+
+    # ------------------------------------------------------------------
+    def _check_against_serial(self, plans, results) -> None:
+        """batched_check: replay the serial reference on the SAME pre-drawn
+        batches and record the max |batched − serial| adapter deviation."""
+        dev = 0.0
+        for plan, res in zip(plans, results):
+            if not len(plan["active_ids"]):
+                continue
+            lanes = {}
+            for r, (stacked, idxs) in res["groups"].items():
+                for j, i in enumerate(idxs):
+                    lanes[i] = (stacked, j)
+            fm = plan["fedra_masks"]
+            for i, v in enumerate(plan["active_ids"]):
+                per_step = [{k: arr[si]
+                             for k, arr in plan["batches"][i].items()}
+                            for si in range(plan["steps_list"][i])]
+                ref_ad, _ = self.trainer.finetune(
+                    self.params, plan["adapters_list"][i], None,
+                    plan["steps_list"][i],
+                    eval_batch=self.local_eval[plan["ti"]],
+                    layer_mask=fm[i] if i < len(fm) else None,
+                    batches=per_step)
+                stacked, j = lanes[i]
+                for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                                jax.tree_util.tree_leaves(ref_ad)):
+                    dev = max(dev, float(jnp.max(jnp.abs(a[j] - b))))
+        self.engine_check_dev = max(self.engine_check_dev, dev)
+
+    # ------------------------------------------------------------------
+    def _finish_task(self, plan: Dict[str, Any], tr: Dict[str, Any],
+                     budget: float) -> Dict[str, Any]:
+        """Phase 3: §III-C accounting, §IV-E fallbacks, aggregation,
+        global eval and the UCB-DUAL dual update for one task."""
+        cfg = self.cfg
+        ti = plan["ti"]
+        rsu = plan["rsu"]
+        server = self.servers[ti]
+        active_ids = plan["active_ids"]
+        ranks, arms = plan["ranks"], plan["arms"]
+        departing, staying = plan["departing"], plan["staying"]
+        dists = self.mobility.distances_to(rsu)
+
+        kept_idx: List[int] = []         # positions within the active list
+        kept_weights: List[float] = []
+        kept_masks: List[Any] = []
+        kept_adapters: List[Any] = []    # serial engine only
         per_v_reward = np.zeros(cfg.num_vehicles, np.float32)
         per_v_energy = np.zeros(cfg.num_vehicles, np.float32)
         costs_list: List[cm.RoundCosts] = []
         comm_params = 0
         n_fallback = {0: 0, 1: 0, 2: 0}
 
-        for i, (ad, v) in enumerate(zip(adapters_list, active_ids)):
+        for i, v in enumerate(active_ids):
             rank = int(ranks[v])
-            ds = self.client_data[ti][v]
             dep = bool(departing[v])
-            steps = cfg.local_steps
-            frac = 1.0
-            if dep:
-                frac = cfg.departure_fraction
-                steps = max(1, int(round(cfg.local_steps * frac)))
-            mask = fedra_masks[i] if i < len(fedra_masks) else None
-            new_ad, metrics = self.trainer.finetune(
-                self.params, ad, ds, steps,
-                eval_batch=self.local_eval[ti], layer_mask=mask)
-            local_acc = metrics.get("eval_accuracy",
-                                    metrics.get("accuracy", 0.0))
+            frac = plan["frac_list"][i]
+            mask = (plan["fedra_masks"][i]
+                    if i < len(plan["fedra_masks"]) else None)
+            local_acc = float(tr["accs"][i])
 
-            # §III-C costs over the real channel
-            dev = self.dev_profiles[v]
+            # §III-C costs over the real channel. NOTE: call order fixed by
+            # active_ids so the fading RNG stream is engine-independent.
+            devp = self.dev_profiles[v]
             rate_d = float(self.channel.rate(self.rsu_profile.tx_power,
                                              dists[v], self.shadow[v]))
-            rate_u = float(self.channel.rate(dev.tx_power, dists[v],
+            rate_u = float(self.channel.rate(devp.tx_power, dists[v],
                                              self.shadow[v]))
             payload = cm.adapter_payload_params(self.cost_dims, rank)
             g = self.g_cache.get(rank, cm.g_factor(self.cost_cfg, cfg.lora,
                                                    rank))
             if cfg.method == "fedra":
                 # FedRA clients train (and upload) only their layer subset
-                fr = self.servers[ti].fedra_fraction
+                fr = server.fedra_fraction
                 payload = int(payload * fr)
                 g = g * (0.4 + 0.6 * fr)
             costs = cm.vehicle_round_costs(
-                dev, self.rsu_profile, rank=rank, payload_params=payload,
+                devp, self.rsu_profile, rank=rank, payload_params=payload,
                 bytes_per_param=cfg.bytes_per_param, rate_down=rate_d,
                 rate_up=rate_u,
                 num_samples=int(cfg.batch_size * cfg.local_steps * frac),
@@ -284,22 +443,22 @@ class IoVSimulator:
                 cfg.ucb, jnp.asarray(local_acc), jnp.asarray(tau)))
             costs_list.append(costs)
             if contribute:
-                kept_adapters.append(new_ad)
-                kept_weights.append(float(len(ds)))
                 kept_idx.append(i)
+                kept_weights.append(float(len(self.client_data[ti][v])))
                 if mask is not None:
                     kept_masks.append(mask)
+                if tr["ads_list"] is not None:
+                    kept_adapters.append(tr["ads_list"][i])
                 comm_params += payload
 
-        agg_costs = cm.rsu_agg_costs(self.rsu_profile, len(kept_adapters))
+        agg_costs = cm.rsu_agg_costs(self.rsu_profile, len(kept_idx))
         summary = cm.task_round_summary(costs_list, agg_costs)
-        server.aggregate(kept_adapters, kept_weights or [1.0],
-                         masks=kept_masks if kept_masks else None,
-                         indices=kept_idx)
+        self._aggregate_task(server, plan, tr, kept_idx, kept_weights,
+                             kept_masks, kept_adapters)
 
         # global accuracy on the held-out task eval set
         gad = server.eval_adapters()
-        if gad is not None and len(kept_adapters):
+        if gad is not None and kept_idx:
             m = self.trainer.evaluate(self.params, gad,
                                       self.eval_batches[ti])
             acc = m["accuracy"]
@@ -330,6 +489,47 @@ class IoVSimulator:
                 "fallbacks": dict(n_fallback),
                 "comm_params": int(comm_params),
                 "budget": float(budget)}
+
+    # ------------------------------------------------------------------
+    def _aggregate_task(self, server, plan, tr, kept_idx, kept_weights,
+                        kept_masks, kept_adapters) -> None:
+        """Upload + aggregation. The batched engine hands the server the
+        kept clients as stacked per-rank groups (one lane-gather per group);
+        the serial engine keeps the per-client list path."""
+        if tr["groups"] is None or not kept_idx:
+            server.aggregate(kept_adapters, kept_weights or [1.0],
+                             masks=kept_masks if kept_masks else None,
+                             indices=kept_idx)
+            return
+        keep = set(kept_idx)
+        w_of = dict(zip(kept_idx, kept_weights))
+        mask_of = dict(zip(kept_idx, kept_masks)) if kept_masks else {}
+        gspecs = []
+        for r in sorted(tr["groups"]):
+            stacked, idxs = tr["groups"][r]
+            lanes = [j for j, i in enumerate(idxs) if i in keep]
+            if not lanes:
+                continue
+            gi = [idxs[j] for j in lanes]
+            # pad each group to a power-of-two lane count with ZERO-WEIGHT
+            # copies of lane 0 — exact no-ops in every weighted reduction,
+            # but they bound the shape set the aggregation einsums see
+            # (otherwise every new kept-count recompiles them)
+            npad = (1 << max(len(lanes) - 1, 0).bit_length()) - len(lanes)
+            sub = take_lanes(stacked, lanes + [lanes[0]] * npad)
+            weights = np.asarray([w_of[i] for i in gi] + [0.0] * npad,
+                                 np.float32)
+            masks = None
+            if mask_of:
+                zero = np.zeros_like(np.asarray(mask_of[gi[0]], np.float32))
+                masks = np.stack([np.asarray(mask_of[i]) for i in gi]
+                                 + [zero] * npad)
+            gspecs.append({
+                "adapters": sub,
+                "weights": weights,
+                "masks": masks,
+                "indices": gi + [gi[0]] * npad})
+        server.aggregate_grouped(gspecs)
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0

@@ -8,6 +8,16 @@ import pytest
 
 from repro.config import LoRAConfig
 
+
+def pytest_configure(config):
+    # CI fast tier runs `pytest -m "not slow"`; the full suite (tier-1
+    # verify) runs everything. Tag multi-round simulator / interpret-mode
+    # kernel tests with @pytest.mark.slow.
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/simulator/interpret-mode tests "
+        "(excluded from the CI fast tier)")
+
 REDUCED_MODULES = {
     "smollm-135m": "smollm_135m",
     "starcoder2-15b": "starcoder2_15b",

@@ -1,0 +1,240 @@
+"""Batched round engine: equivalence against the serial reference path.
+
+Fast tier: trainer- and server-level equivalence on a tiny config.
+Slow tier: a 2-round IoVSimulator regression — the batched engine must
+reproduce the serial engine's selected ranks and energy accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LoRAConfig
+from repro.data import ClientDataset
+from repro.federated.batched_client import (BatchedLocalTrainer,
+                                            draw_batches, stack_trees)
+from repro.federated.client import LocalTrainer
+from repro.federated.server import RSUServer
+from repro.models import transformer as T
+
+
+def _tiny_cfg():
+    from repro.configs import vit_base_paper
+    return vit_base_paper.vit_base_paper().with_overrides(
+        name="vit-test-engine", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=32)
+
+
+LORA = LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8))
+B, S = 4, 8
+
+
+def _data(cfg, n_vehicles, per_shard=24, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size,
+                        (n_vehicles * per_shard, S)).astype(np.int32)
+    labs = rng.integers(0, 8, (n_vehicles * per_shard,)).astype(np.int32)
+    dss = [ClientDataset(toks[i * per_shard:(i + 1) * per_shard],
+                         labs[i * per_shard:(i + 1) * per_shard],
+                         B, seed=seed + i) for i in range(n_vehicles)]
+    evb = {"tokens": toks[:16], "labels": labs[:16]}
+    return dss, evb
+
+
+def _max_dev(tree_a, tree_b):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(tree_a), jax.tree_util.tree_leaves(tree_b)))
+
+
+def test_batched_matches_serial_trainer():
+    """Same pre-drawn batches through both engines → same adapters/metrics
+    (within float reassociation tolerance)."""
+    cfg = _tiny_cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    V, steps = 5, 3
+    dss, evb = _data(cfg, V)
+    ads = [T.init_adapters(jax.random.PRNGKey(10 + i), cfg, LORA, rank=4)
+           for i in range(V)]
+
+    batches = [draw_batches(ds, steps, steps) for ds in dss]
+    serial = LocalTrainer(cfg, LORA, lr=5e-3)
+    ref, ref_metrics = [], []
+    for i in range(V):
+        per_step = [{k: a[si] for k, a in batches[i].items()}
+                    for si in range(steps)]
+        ad, m = serial.finetune(params, ads[i], None, steps,
+                                eval_batch=evb, batches=per_step)
+        ref.append(ad)
+        ref_metrics.append(m)
+
+    batched = BatchedLocalTrainer(cfg, LORA, lr=5e-3, max_steps=steps)
+    out, out_metrics = batched.finetune_group(
+        params, ads, batches, [steps] * V, eval_batch=evb)
+
+    for i in range(V):
+        assert _max_dev(out[i], ref[i]) < 1e-5, i
+        assert abs(out_metrics[i]["eval_accuracy"]
+                   - ref_metrics[i]["eval_accuracy"]) < 1e-6, i
+        assert abs(out_metrics[i]["loss"] - ref_metrics[i]["loss"]) < 1e-4, i
+
+
+def test_batched_heterogeneous_step_counts():
+    """§IV-E: departing vehicles train fewer steps inside the same scan."""
+    cfg = _tiny_cfg()
+    params = T.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    steps, counts = 3, [1, 3, 2]
+    dss, evb = _data(cfg, len(counts), seed=3)
+    ads = [T.init_adapters(jax.random.PRNGKey(20 + i), cfg, LORA, rank=2)
+           for i in range(len(counts))]
+    batches = [draw_batches(ds, c, steps) for ds, c in zip(dss, counts)]
+
+    serial = LocalTrainer(cfg, LORA, lr=5e-3)
+    ref = []
+    for i, c in enumerate(counts):
+        per_step = [{k: a[si] for k, a in batches[i].items()}
+                    for si in range(c)]
+        ad, _ = serial.finetune(params, ads[i], None, c,
+                                eval_batch=evb, batches=per_step)
+        ref.append(ad)
+
+    batched = BatchedLocalTrainer(cfg, LORA, lr=5e-3, max_steps=steps)
+    out, _ = batched.finetune_group(params, ads, batches, counts,
+                                    eval_batch=evb)
+    for i in range(len(counts)):
+        assert _max_dev(out[i], ref[i]) < 1e-5, i
+
+
+def test_group_chunking_preserves_order():
+    """Groups wider than MAX_GROUP are chunked and reassembled in order."""
+    from repro.federated.batched_client import MAX_GROUP
+    cfg = _tiny_cfg()
+    params = T.init_params(jax.random.PRNGKey(2), cfg, dtype=jnp.float32)
+    V, steps = MAX_GROUP + 3, 2
+    dss, evb = _data(cfg, V, seed=7)
+    ads = [T.init_adapters(jax.random.PRNGKey(40 + i), cfg, LORA, rank=4)
+           for i in range(V)]
+    batches = [draw_batches(ds, steps, steps) for ds in dss]
+
+    batched = BatchedLocalTrainer(cfg, LORA, lr=5e-3, max_steps=steps)
+    stacked, metrics = batched.finetune_group_stacked(
+        params, ads, batches, [steps] * V, eval_batch=evb)
+    assert jax.tree_util.tree_leaves(stacked)[0].shape[0] == V
+    assert metrics["eval_accuracy"].shape == (V,)
+
+    # lane i of the chunked call == unchunked result for vehicle i
+    solo, _ = batched.finetune_group_stacked(
+        params, [ads[MAX_GROUP]], [batches[MAX_GROUP]], [steps],
+        eval_batch=evb)
+    lane = jax.tree_util.tree_map(lambda x: x[MAX_GROUP], stacked)
+    assert _max_dev(lane, jax.tree_util.tree_map(
+        lambda x: x[0], solo)) < 1e-5
+
+
+@pytest.mark.parametrize("method", ["ours", "homolora", "hetlora", "fedra"])
+def test_grouped_aggregation_matches_serial(method):
+    """server.aggregate_grouped over stacked per-rank groups must equal
+    server.aggregate over the per-client list."""
+    cfg = _tiny_cfg()
+    ranks = [2, 2, 4] if method in ("ours", "hetlora") else [4, 4, 4]
+    sa = RSUServer(cfg, LORA, method, seed=11)
+    sb = RSUServer(cfg, LORA, method, seed=11)
+    ads_a = sa.distribute(list(ranks))
+    ads_b = sb.distribute(list(ranks))
+    # perturb so the clients differ (b is zero-init)
+    clients = []
+    for i, ad in enumerate(ads_a):
+        clients.append(jax.tree_util.tree_map(
+            lambda x, i=i: x + 0.01 * (i + 1) * jnp.ones_like(x), ad))
+    weights = [2.0, 1.0, 3.0]
+    masks = sa.masks if method == "fedra" else None
+
+    sa.aggregate(clients, weights,
+                 masks=list(masks) if masks else None,
+                 indices=list(range(len(clients))))
+
+    groups = {}
+    for i, r in enumerate(ranks):
+        groups.setdefault(r, []).append(i)
+    gspecs = []
+    for r in sorted(groups):
+        idx = groups[r]
+        gspecs.append({
+            "adapters": stack_trees([clients[i] for i in idx]),
+            "weights": np.asarray([weights[i] for i in idx], np.float32),
+            "masks": (np.stack([np.asarray(masks[i]) for i in idx])
+                      if masks else None),
+            "indices": idx})
+    sb.aggregate_grouped(gspecs)
+
+    state_a = sa.merged if method == "ours" else sa.global_adapters
+    state_b = sb.merged if method == "ours" else sb.global_adapters
+    assert _max_dev(state_a, state_b) < 1e-5
+
+
+def test_grouped_residual_aggregation_matches_serial():
+    """The residual ('ours_residual') branch of aggregate_grouped —
+    merged += new − old over the distributed bases, with zero-weight pad
+    lanes — must equal the serial residual path."""
+    cfg = _tiny_cfg()
+    ranks = [2, 4, 4]
+    sa = RSUServer(cfg, LORA, "ours", seed=13, residual=True)
+    sb = RSUServer(cfg, LORA, "ours", seed=13, residual=True)
+    weights = [1.0, 2.0, 1.5]
+    for rnd in range(2):   # round 2 exercises merged != None (residual)
+        ads_a = sa.distribute(list(ranks))
+        sb.distribute(list(ranks))
+        clients = [jax.tree_util.tree_map(
+            lambda x, i=i: x + 0.01 * (i + 1 + rnd) * jnp.ones_like(x), ad)
+            for i, ad in enumerate(ads_a)]
+        sa.aggregate(clients, list(weights),
+                     indices=list(range(len(clients))))
+        groups = {}
+        for i, r in enumerate(ranks):
+            groups.setdefault(r, []).append(i)
+        gspecs = []
+        for r in sorted(groups):
+            idx = groups[r]
+            # zero-weight pad lane, as the batched simulator emits
+            gspecs.append({
+                "adapters": stack_trees([clients[i] for i in idx]
+                                        + [clients[idx[0]]]),
+                "weights": np.asarray([weights[i] for i in idx] + [0.0],
+                                      np.float32),
+                "masks": None,
+                "indices": idx + [idx[0]]})
+        sb.aggregate_grouped(gspecs)
+        assert _max_dev(sa.merged, sb.merged) < 1e-5, rnd
+
+
+@pytest.mark.slow
+def test_sim_regression_batched_matches_serial():
+    """2-round IoVSimulator: the batched engine reproduces the serial
+    engine's selected ranks and energy accounting."""
+    from repro.sim.simulator import IoVSimulator, SimConfig
+
+    hists = {}
+    for engine in ("serial", "batched"):
+        sim = IoVSimulator(SimConfig(
+            method="ours", rounds=2, num_vehicles=8, num_tasks=2,
+            seed=3, local_steps=2, engine=engine))
+        hists[engine] = sim.run()
+    for r_s, r_b in zip(hists["serial"], hists["batched"]):
+        for t_s, t_b in zip(r_s["tasks"], r_b["tasks"]):
+            assert t_s["mean_rank"] == t_b["mean_rank"], r_s["round"]
+            assert t_s["energy"] == pytest.approx(t_b["energy"], rel=1e-5)
+            assert t_s["comm_params"] == t_b["comm_params"]
+        assert r_s["energy"] == pytest.approx(r_b["energy"], rel=1e-5)
+        assert r_s["accuracy"] == pytest.approx(r_b["accuracy"], abs=1e-4)
+
+
+@pytest.mark.slow
+def test_engine_check_mode_deviation_bounded():
+    """batched_check replays the serial reference on identical data and
+    records the max adapter deviation — must sit at float-noise level."""
+    from repro.sim.simulator import IoVSimulator, SimConfig
+
+    sim = IoVSimulator(SimConfig(
+        method="ours", rounds=1, num_vehicles=6, num_tasks=2,
+        seed=5, local_steps=2, engine="batched_check"))
+    sim.run()
+    assert sim.engine_check_dev < 1e-5

@@ -10,6 +10,8 @@ from repro.kernels.lora_matmul.ref import lora_matmul_ref
 from repro.kernels.wkv6.ops import wkv6
 from repro.kernels.wkv6.ref import wkv6_ref
 
+pytestmark = pytest.mark.slow   # Pallas interpret-mode sweeps
+
 KEY = jax.random.PRNGKey(0)
 
 

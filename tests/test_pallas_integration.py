@@ -9,6 +9,8 @@ from repro.config import LoRAConfig
 from repro.models import runmode
 from repro.models import transformer as T
 
+pytestmark = pytest.mark.slow   # Pallas interpret-mode model runs
+
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma-7b"])
 def test_forward_matches_with_pallas_attention(arch, rng_key):

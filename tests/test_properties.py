@@ -1,8 +1,14 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+hypothesis is an optional dev dependency (see pyproject.toml extras) — the
+whole module is skipped cleanly when it is not installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import EnergyAllocConfig, LoRAConfig, UCBDualConfig

@@ -5,6 +5,8 @@ import pytest
 
 from repro.sim.simulator import IoVSimulator, SimConfig
 
+pytestmark = pytest.mark.slow   # multi-round simulator runs
+
 
 @pytest.fixture(scope="module")
 def short_run():
