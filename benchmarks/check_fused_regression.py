@@ -1,0 +1,62 @@
+"""CI regression gate for the fused round engine.
+
+Compares a freshly measured BENCH_fused_round*.json against the committed
+baseline and fails (exit 1) when:
+
+  - the fused/fused_scan speedup over the batched engine regresses more
+    than --tolerance (default 10%) relative to the baseline ratio, or
+  - the fused round body compiled more than once during the fresh run.
+
+Speedup RATIOS (fused vs batched on the same machine, same rounds) are
+compared rather than absolute times, so the gate is meaningful across
+heterogeneous CI runners.
+
+Usage:
+    python -m benchmarks.check_fused_regression \
+        --baseline /tmp/baseline.json \
+        --current benchmarks/results/BENCH_fused_round_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline_path: str, current_path: str,
+          tolerance: float = 0.10) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(current_path) as f:
+        cur = json.load(f)
+
+    ok = True
+    if not cur.get("fused_round_body_compiled_once", False):
+        print("FAIL: fused round body compiled more than once "
+              "(or compile guard missing) in the current run")
+        ok = False
+
+    for key in ("fused", "fused_scan"):
+        b = base.get("speedups_vs_batched", {}).get(key)
+        c = cur.get("speedups_vs_batched", {}).get(key)
+        if b is None or c is None:
+            print(f"FAIL: speedup '{key}' missing "
+                  f"(baseline={b}, current={c})")
+            ok = False
+            continue
+        floor = (1.0 - tolerance) * float(b)
+        status = "ok" if float(c) >= floor else "REGRESSED"
+        print(f"{key}: baseline x{b}  current x{c}  floor x{floor:.3f}  "
+              f"[{status}]")
+        if float(c) < floor:
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--current", required=True)
+    p.add_argument("--tolerance", type=float, default=0.10)
+    a = p.parse_args()
+    sys.exit(check(a.baseline, a.current, a.tolerance))

@@ -83,6 +83,23 @@ def aggregate_merged(client_adapters: Sequence[Any], weights: Sequence[float],
     return out
 
 
+def _delta_svd(delta: jnp.ndarray, max_rank: int, seed):
+    """Truncated SVD of one (possibly layer-stacked) merged delta.
+
+    delta may be (d1, d2), (L, d1, d2) or (L, E, d1, d2); the SVD runs
+    vmapped over the flattened leading axes at mr = min(max_rank, d1, d2).
+    Returns (u, s, vt) with the original leading axes restored.
+    """
+    lead = delta.shape[:-2]
+    d1, d2 = delta.shape[-2:]
+    flat = delta.reshape((-1, d1, d2))
+    mr = min(max_rank, d1, d2)
+    us, ss, vts = jax.vmap(
+        lambda m: randomized_svd(m, mr, seed=seed))(flat)
+    return (us.reshape(lead + (d1, mr)), ss.reshape(lead + (mr,)),
+            vts.reshape(lead + (mr, d2)))
+
+
 def redistribute(merged: Any, rank: int, scale: float, max_rank: int,
                  seed: int = 0, balanced: bool = False) -> Any:
     """Paper Fig. 3: truncated SVD of each Δθ, personalized rank-η factors.
@@ -96,17 +113,8 @@ def redistribute(merged: Any, rank: int, scale: float, max_rank: int,
     paths = tree_paths_delta(merged)
     out = merged
     for path in paths:
-        delta = tree_get(merged, path)["delta"]
-        # stacked layer axes: delta may be (L, d1, d2) or (L, E, d1, d2)
-        lead = delta.shape[:-2]
-        d1, d2 = delta.shape[-2:]
-        flat = delta.reshape((-1, d1, d2))
-        mr = min(max_rank, d1, d2)
-        us, ss, vts = jax.vmap(
-            lambda m: randomized_svd(m, mr, seed=seed))(flat)
-        u = us.reshape(lead + (d1, mr))
-        s = ss.reshape(lead + (mr,))
-        vt = vts.reshape(lead + (mr, d2))
+        u, s, vt = _delta_svd(tree_get(merged, path)["delta"], max_rank,
+                              seed)
         if balanced:
             root = jnp.sqrt(jnp.maximum(s[..., :rank], 0.0) / scale)
             a = u[..., :, :rank] * root[..., None, :]
@@ -248,6 +256,118 @@ def aggregate_fedra_stacked(stacked: Any, weights: Any,
                         * _wvec(w, ad["b"].ndim), axis=0)
         da = den.reshape((den.shape[0],) + (1,) * (num_a.ndim - 1))
         out = tree_set(out, path, {"a": num_a / da, "b": num_b / da})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rank-padded fleet aggregation / redistribution — consumed by the FUSED
+# round engine. Every client adapter lives in max_rank-wide buffers with the
+# rank tail zeroed (core.lora rank-padding invariant), so the whole fleet is
+# ONE stacked tree and the merged-delta reduction is one einsum per target —
+# no per-rank grouping, no shape polymorphism, one jit cache key.
+# ---------------------------------------------------------------------------
+
+def aggregate_merged_padded(stacked: Any, weights: jnp.ndarray,
+                            scale: float) -> Any:
+    """Merged-delta aggregation over a rank-padded fleet-stacked tree.
+
+    stacked: adapter tree with a leading (V,) axis, every adapter padded to
+    a common max rank with zeroed tails (zero tails contribute nothing to
+    A·B, so this equals :func:`aggregate_merged` over the per-client list).
+    weights: (V,) — non-contributing vehicles carry weight 0, which makes
+    them exact no-ops in the weighted reduction.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    paths = tree_paths(_skeleton(stacked))
+    out = _skeleton(stacked)
+    for path in paths:
+        ad = tree_get(stacked, path)
+        a = ad["a"].astype(jnp.float32) * _wvec(wn, ad["a"].ndim)
+        delta = scale * jnp.einsum("v...ir,v...ro->...io", a,
+                                   ad["b"].astype(jnp.float32))
+        out = tree_set(out, path, {"delta": delta})
+    return out
+
+
+def merged_svd(merged: Any, max_rank: int, seed) -> Any:
+    """Shared truncated SVD of every merged delta (one SVD per target,
+    amortized across the whole fleet — paper Fig. 3's RSU-side step).
+
+    seed may be a traced int (the fused engine uses the round index, as
+    RSUServer.distribute does). Returns a tree of {"u","s","vt"} whose
+    factors are zero-padded out to `max_rank` so downstream shapes are
+    rank-independent even when min(d1,d2) < max_rank.
+    """
+    paths = tree_paths_delta(merged)
+    out = merged
+    for path in paths:
+        u, s, vt = _delta_svd(tree_get(merged, path)["delta"], max_rank,
+                              seed)
+        mr = u.shape[-1]
+        if mr < max_rank:
+            pad = max_rank - mr
+            u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, pad)])
+            s = jnp.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, pad)])
+            vt = jnp.pad(vt, [(0, 0)] * (vt.ndim - 2) + [(0, pad), (0, 0)])
+        out = tree_set(out, path, {"u": u, "s": s, "vt": vt})
+    return out
+
+
+def tree_paths_svd(tree: Any) -> List[Tuple]:
+    """Paths to SVD-factor dicts (nodes holding 'u' and 'vt')."""
+    paths = []
+
+    def rec(node, path):
+        if isinstance(node, dict) and "u" in node and "vt" in node:
+            paths.append(tuple(path))
+            return
+        if isinstance(node, dict):
+            for k2, v in node.items():
+                rec(v, path + [k2])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, path + [i])
+    rec(tree, [])
+    return paths
+
+
+def factors_for_ranks(svd_tree: Any, rank_mask: jnp.ndarray,
+                      scale: float) -> Any:
+    """Per-vehicle rank-padded factors from one shared SVD.
+
+    rank_mask: (V, max_rank) 0/1 — column mask for each vehicle's rank.
+    Returns a fleet-stacked adapter tree: a_v = (u·s)/scale with columns
+    ≥ η_v zeroed, b_v = vt with rows ≥ η_v zeroed — elementwise identical
+    to :func:`redistribute` at each vehicle's rank (the serial engine's
+    per-unique-rank calls recompute the same seeded SVD, so sharing it is
+    exact, not approximate).
+    """
+    mask = jnp.asarray(rank_mask, jnp.float32)
+    V = mask.shape[0]
+    out = svd_tree
+    for path in tree_paths_svd(svd_tree):
+        f = tree_get(svd_tree, path)
+        a1 = (f["u"] * f["s"][..., None, :]) / scale    # (..., d1, R)
+        cm = mask.reshape((V,) + (1,) * (a1.ndim - 1) + (mask.shape[-1],))
+        rm = mask.reshape((V,) + (1,) * (f["vt"].ndim - 2)
+                          + (mask.shape[-1], 1))
+        a = a1[None] * cm                                # (V, ..., d1, R)
+        b = jnp.broadcast_to(f["vt"][None], (V,) + f["vt"].shape) * rm
+        out = tree_set(out, path, {"a": a, "b": b})
+    return out
+
+
+def factors_full(svd_tree: Any, scale: float) -> Any:
+    """Single full-rank adapter view of a :func:`merged_svd` result —
+    the fused engine's in-program twin of ``eval_adapters`` (a = U·Σ/scale,
+    b = Vᵀ at max_rank)."""
+    out = svd_tree
+    for path in tree_paths_svd(svd_tree):
+        f = tree_get(svd_tree, path)
+        out = tree_set(out, path,
+                       {"a": (f["u"] * f["s"][..., None, :]) / scale,
+                        "b": f["vt"]})
     return out
 
 

@@ -118,6 +118,37 @@ def vehicle_round_costs(dev: DeviceProfile, rsu: RSUProfile, *,
                       e_down=e_down, e_comp=e_comp, e_up=e_up)
 
 
+def vehicle_round_costs_vec(*, freq, comp_power, tx_power, flops_per_sample,
+                            rsu_tx_power, payload_params, bytes_per_param,
+                            rate_down, rate_up, num_samples, g):
+    """Vectorized jnp twin of :func:`vehicle_round_costs` over a fleet axis.
+
+    Every argument is broadcastable to the (V,) fleet shape (scalars allowed).
+    comp_power is the precomputed κ·f³ (W): the cube of a >1e12 FLOP/s
+    frequency overflows float32, so the caller folds it on the host in
+    float64. Returns a dict of (V,) arrays with the same stage split as
+    :class:`RoundCosts` — consumed inside the fused round engine's single
+    jit program, where per-vehicle Python objects cannot exist.
+    """
+    import jax.numpy as jnp
+    bits = (jnp.asarray(payload_params, jnp.float32)
+            * float(bytes_per_param) * 8.0)
+    rd = jnp.maximum(jnp.asarray(rate_down, jnp.float32), 1e-9)
+    ru = jnp.maximum(jnp.asarray(rate_up, jnp.float32), 1e-9)
+    tau_down = bits / rd
+    e_down = rsu_tx_power * tau_down
+    tau_comp = (jnp.asarray(flops_per_sample, jnp.float32)
+                * jnp.asarray(num_samples, jnp.float32)
+                * jnp.asarray(g, jnp.float32) / jnp.asarray(freq, jnp.float32))
+    e_comp = jnp.asarray(comp_power, jnp.float32) * tau_comp
+    tau_up = bits / ru
+    e_up = jnp.asarray(tx_power, jnp.float32) * tau_up
+    return {"tau_down": tau_down, "tau_comp": tau_comp, "tau_up": tau_up,
+            "e_down": e_down, "e_comp": e_comp, "e_up": e_up,
+            "latency": tau_down + tau_comp + tau_up,
+            "energy": e_down + e_comp + e_up}
+
+
 def rsu_agg_costs(rsu: RSUProfile, num_vehicles: int) -> Tuple[float, float]:
     tau = rsu.agg_flops_per_vehicle * num_vehicles / rsu.freq
     e = rsu.kappa * rsu.freq ** 3 * tau

@@ -29,6 +29,37 @@ def init_alloc(cfg: EnergyAllocConfig, num_tasks: int) -> AllocState:
                       round=0)
 
 
+def _realloc(state: AllocState, cfg: EnergyAllocConfig,
+             consumed: jnp.ndarray, accuracy: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The reallocation maths of Algorithm 1 (shared by the host-side
+    :func:`step` and the jit/scan-safe :func:`step_scan`).
+    Returns (budgets, difficulty, weights)."""
+    budgets = state.budgets
+    q_safe = jnp.maximum(accuracy, 1e-3)
+    ratio = budgets / q_safe
+    ratio = ratio / jnp.maximum(jnp.max(ratio), 1e-12)  # keep h ∈ (0,1]
+    difficulty = cfg.xi * state.difficulty + (1 - cfg.xi) * ratio
+    util = jnp.clip(consumed / jnp.maximum(budgets, 1e-12), 0.0, 1.0)
+    w = jnp.power(jnp.maximum(difficulty, 1e-6), cfg.zeta) * util
+    w = jnp.maximum(w, 1e-9)
+    # NOTE (paper ambiguity): with the initial equal split Σ Ē_t =
+    # E_total, Alg 1's `remaining = E_total − Σ Ē_t` would be 0 forever.
+    # We first *reclaim* over-provisioned budget (shrink each task toward
+    # its actual consumption — this is exactly what the utilization
+    # signal μ_t is motivated by in §IV-B), then redistribute the
+    # reclaimed pool proportionally to w_t with the 0.7·E_total cap.
+    floor = jnp.minimum(budgets, jnp.maximum(consumed, 0.05 * budgets))
+    remaining = cfg.e_total - jnp.sum(floor)
+    delta = w * remaining / jnp.sum(w)
+    budgets = jnp.minimum(floor + delta, cfg.task_cap_frac * cfg.e_total)
+    # cap can strand surplus; hand it back uniformly to uncapped tasks
+    total = jnp.sum(budgets)
+    budgets = jnp.where(total > cfg.e_total,
+                        budgets * cfg.e_total / total, budgets)
+    return budgets, difficulty, w
+
+
 def step(state: AllocState, cfg: EnergyAllocConfig,
          consumed: jnp.ndarray, accuracy: jnp.ndarray
          ) -> Tuple[AllocState, dict]:
@@ -42,27 +73,21 @@ def step(state: AllocState, cfg: EnergyAllocConfig,
     difficulty = state.difficulty
     info = {"reallocated": False}
     if m % cfg.warmup_q == 0:
-        q_safe = jnp.maximum(accuracy, 1e-3)
-        ratio = budgets / q_safe
-        ratio = ratio / jnp.maximum(jnp.max(ratio), 1e-12)  # keep h ∈ (0,1]
-        difficulty = cfg.xi * difficulty + (1 - cfg.xi) * ratio
-        util = jnp.clip(consumed / jnp.maximum(budgets, 1e-12), 0.0, 1.0)
-        w = jnp.power(jnp.maximum(difficulty, 1e-6), cfg.zeta) * util
-        w = jnp.maximum(w, 1e-9)
-        # NOTE (paper ambiguity): with the initial equal split Σ Ē_t =
-        # E_total, Alg 1's `remaining = E_total − Σ Ē_t` would be 0 forever.
-        # We first *reclaim* over-provisioned budget (shrink each task toward
-        # its actual consumption — this is exactly what the utilization
-        # signal μ_t is motivated by in §IV-B), then redistribute the
-        # reclaimed pool proportionally to w_t with the 0.7·E_total cap.
-        floor = jnp.minimum(budgets, jnp.maximum(consumed, 0.05 * budgets))
-        remaining = cfg.e_total - jnp.sum(floor)
-        delta = w * remaining / jnp.sum(w)
-        budgets = jnp.minimum(floor + delta,
-                              cfg.task_cap_frac * cfg.e_total)
-        # cap can strand surplus; hand it back uniformly to uncapped tasks
-        total = jnp.sum(budgets)
-        budgets = jnp.where(total > cfg.e_total,
-                            budgets * cfg.e_total / total, budgets)
+        budgets, difficulty, w = _realloc(state, cfg, consumed, accuracy)
         info = {"reallocated": True, "weights": w, "difficulty": difficulty}
     return AllocState(budgets=budgets, difficulty=difficulty, round=m), info
+
+
+def step_scan(state: AllocState, cfg: EnergyAllocConfig,
+              consumed: jnp.ndarray, accuracy: jnp.ndarray) -> AllocState:
+    """Trace-safe twin of :func:`step`: state.round may be a traced int32
+    (the fused engine carries the allocator through `lax.scan`), so the
+    every-Q-rounds trigger becomes a `where` select instead of a Python
+    branch. Numerically identical to :func:`step` on reallocation rounds."""
+    m = state.round + 1
+    do = (m % cfg.warmup_q) == 0
+    new_budgets, new_difficulty, _ = _realloc(state, cfg, consumed, accuracy)
+    return AllocState(
+        budgets=jnp.where(do, new_budgets, state.budgets),
+        difficulty=jnp.where(do, new_difficulty, state.difficulty),
+        round=m)

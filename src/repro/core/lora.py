@@ -76,6 +76,59 @@ def adapter_num_params(d_in: int, d_out: int, rank: int) -> int:
     return rank * (d_in + d_out)
 
 
+# ---------------------------------------------------------------------------
+# Rank padding (fused fleet engine)
+#
+# A rank-r adapter embedded in max_rank-wide buffers with the tail zeroed
+# behaves *exactly* like the rank-r adapter: the extra columns of A and rows
+# of B contribute 0 to (x·A)·B, receive zero gradients (each tail gradient
+# is a product with the zeroed opposite factor), and Adam maps zero moments
+# to zero updates — so the tail stays identically zero through training.
+# This is what lets one jit program serve every rank in φ_η.
+# ---------------------------------------------------------------------------
+
+def rank_arange_mask(ranks: jnp.ndarray, max_rank: int) -> jnp.ndarray:
+    """(..., max_rank) float mask: 1 where the rank index < ranks[...]."""
+    idx = jnp.arange(max_rank, dtype=jnp.int32)
+    return (idx < jnp.asarray(ranks)[..., None]).astype(jnp.float32)
+
+
+def mask_adapter_tree(adapters: Any, mask: jnp.ndarray) -> Any:
+    """Zero the padded rank tail of every adapter in a tree.
+
+    mask: (max_rank,) or (V, max_rank) — with a leading vehicle axis the
+    tree must carry a matching leading (V, ...) axis on every leaf.
+    A-leaves are masked over their last axis, B-leaves over axis -2.
+    """
+    lead = mask.ndim - 1
+
+    def mask_ad(ad):
+        ma = mask.reshape(mask.shape[:lead] + (1,) * (ad["a"].ndim - 1 - lead)
+                          + (mask.shape[-1],))
+        mb = mask.reshape(mask.shape[:lead] + (1,) * (ad["b"].ndim - 2 - lead)
+                          + (mask.shape[-1], 1))
+        return {"a": ad["a"] * ma.astype(ad["a"].dtype),
+                "b": ad["b"] * mb.astype(ad["b"].dtype)}
+
+    from repro.core.aggregation import tree_paths, tree_get, tree_set
+    out = adapters
+    for path in tree_paths(adapters):
+        out = tree_set(out, path, mask_ad(tree_get(out, path)))
+    return out
+
+
+def truncate_adapter_tree(adapters: Any, rank: int) -> Any:
+    """Slice a (possibly padded) adapter tree down to `rank` — the exact
+    inverse view of rank padding (used by the fused_check replay)."""
+    from repro.core.aggregation import tree_paths, tree_get, tree_set
+    out = adapters
+    for path in tree_paths(adapters):
+        ad = tree_get(out, path)
+        out = tree_set(out, path, {"a": ad["a"][..., :rank],
+                                   "b": ad["b"][..., :rank, :]})
+    return out
+
+
 def tree_rank(adapters: Any) -> int:
     """Rank of an adapter tree (all adapters share the client's rank).
 

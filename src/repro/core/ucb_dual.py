@@ -95,3 +95,19 @@ def best_fixed_arm_reward(state: UCBDualState, cfg: UCBDualConfig,
     r_hat = state.reward_sum / n
     e_hat = state.energy_sum / n
     return jnp.max(r_hat - lam_seq_mean * e_hat, axis=-1)
+
+
+def cumulative_regret(state: UCBDualState, cfg: UCBDualConfig,
+                      lam_seq_mean: jnp.ndarray) -> jnp.ndarray:
+    """Per-vehicle realized regret after `state.round` rounds:
+
+        Reg_v(M) = M·R̃_v(η*) − Σ_η N_v(η)·(R̂_v(η) − λ̄·Ê_v(η))
+
+    i.e. the best-fixed-arm comparator of Theorem 1 minus the realized
+    dual-regularized reward sum. Theorem 1 predicts O(√(M ln M)) growth —
+    the sublinearity asserted by tests/test_ucb_invariants.py."""
+    star = best_fixed_arm_reward(state, cfg, lam_seq_mean)      # (V,)
+    pulls = jnp.sum(state.counts, axis=-1)                      # (V,)
+    realized = jnp.sum(state.reward_sum - lam_seq_mean * state.energy_sum,
+                       axis=-1)
+    return star * pulls - realized

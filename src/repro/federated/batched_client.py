@@ -97,6 +97,47 @@ def _bucket(n: int) -> int:
     return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
 
 
+class IdentityLRU:
+    """Bounded identity-keyed cache for unhashable host objects (pytrees).
+
+    Keys on ``(id(obj), extra)`` but stores the key object and verifies
+    identity on lookup — a bare ``id()`` key could be recycled by a later
+    allocation and silently serve another object's data. Evicts least-
+    recently-used entries at ``maxsize``, so long-lived trainers hold at
+    most ``maxsize`` strong references to key/value trees no matter how
+    many rounds (or simulators) pass through them. (The previous scheme
+    kept every entry until an unbounded dict crossed a clear() threshold —
+    each entry pinning a full base-weight or eval-batch tree alive.)
+    """
+
+    def __init__(self, maxsize: int):
+        from collections import OrderedDict
+        self.maxsize = int(maxsize)
+        self._d: "OrderedDict[Tuple[int, Any], Tuple[Any, Any]]" = \
+            OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, obj: Any, extra: Any = None) -> Optional[Any]:
+        key = (id(obj), extra)
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is None or hit[0] is not obj:
+                return None
+            self._d.move_to_end(key)
+            return hit[1]
+
+    def put(self, obj: Any, value: Any, extra: Any = None) -> None:
+        key = (id(obj), extra)
+        with self._lock:
+            self._d[key] = (obj, value)
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+
 def _concat_chunks(parts: Sequence[Tuple[Any, Dict[str, np.ndarray]]]
                    ) -> Tuple[Any, Dict[str, np.ndarray]]:
     """Reassemble chunked finetune_group_stacked results in order."""
@@ -129,11 +170,11 @@ class BatchedLocalTrainer:
         self._fns_lock = threading.Lock()
         self._pool: Optional[ThreadPoolExecutor] = None
         self._ones_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
-        # id()-keyed caches hold a STRONG reference to the key object and
-        # verify identity on lookup — a bare id() key could be recycled by
-        # a later allocation and silently serve another object's data
-        self._eval_cache: Dict[Tuple[int, int],
-                               Tuple[Any, Dict[str, jnp.ndarray]]] = {}
+        # bounded identity caches: one live eval batch per (task, device)
+        # and one placed params tree per device is the steady state, so
+        # small bounds hold — and stale trees from finished simulators are
+        # evicted instead of pinned (see IdentityLRU)
+        self._eval_cache = IdentityLRU(maxsize=16)
         # Chunks are round-robined over the host's CPU devices: two XLA
         # executions only truly overlap on separate devices (a single
         # device's runtime serializes programs). Default is one device;
@@ -141,7 +182,7 @@ class BatchedLocalTrainer:
         # --xla_force_host_platform_device_count (its own process only).
         self._devices = ([d for d in jax.devices()
                           if d.platform == "cpu"] or jax.devices())
-        self._params_dev: Dict[Tuple[int, int], Tuple[Any, Any]] = {}
+        self._params_dev = IdentityLRU(maxsize=8)
 
     # ------------------------------------------------------------------
     def _lora_at(self, rank: int) -> LoRAConfig:
@@ -223,14 +264,11 @@ class BatchedLocalTrainer:
 
     # ------------------------------------------------------------------
     def _params_on(self, params, dev):
-        key = (id(params), dev.id)
-        hit = self._params_dev.get(key)
-        if hit is not None and hit[0] is params:
-            return hit[1]
+        hit = self._params_dev.get(params, extra=dev.id)
+        if hit is not None:
+            return hit
         out = jax.device_put(params, dev)
-        if len(self._params_dev) > 16:   # bound growth across sims
-            self._params_dev.clear()
-        self._params_dev[key] = (params, out)
+        self._params_dev.put(params, out, extra=dev.id)
         return out
 
     def finetune_group_stacked(self, params, adapters_list: Sequence[Any],
@@ -309,15 +347,10 @@ class BatchedLocalTrainer:
                       "labels": jnp.zeros((1,), jnp.int32)}
             else:
                 # same eval dict every round per task → convert once
-                ekey = (id(eval_batch), dev.id)
-                hit = self._eval_cache.get(ekey)
-                if hit is not None and hit[0] is eval_batch:
-                    ev = hit[1]
-                else:
+                ev = self._eval_cache.get(eval_batch, extra=dev.id)
+                if ev is None:
                     ev = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-                    if len(self._eval_cache) > 64:
-                        self._eval_cache.clear()
-                    self._eval_cache[ekey] = (eval_batch, ev)
+                    self._eval_cache.put(eval_batch, ev, extra=dev.id)
 
             run = self._group_fn(rank, vpad, eval_batch is not None,
                                  shared=shared)

@@ -1,0 +1,666 @@
+"""Fused on-device round engine: rank-padded fleet megastep + multi-round scan.
+
+The batched engine (PR 1) removed per-vehicle dispatch but still fragments a
+round into one jit call per (task, rank, bucket) group glued together by a
+thread pool, with host round-trips between UCB-DUAL selection, training,
+§III-C accounting and aggregation. This module compiles the ENTIRE round —
+
+    ucb_dual.select_ranks  →  SVD redistribution at per-vehicle ranks
+    →  vmap×scan local fine-tuning of the whole fleet
+    →  §III-C cost accounting + §IV-E fallback decisions
+    →  rank-padded merged-delta aggregation  →  global eval
+    →  ucb_dual.update + Algorithm-1 budget reallocation
+
+— into ONE jit program with ONE cache key, regardless of fleet size, rank
+mix, coverage or mobility churn. The trick is rank padding (core.lora):
+every adapter lives in max(φ_η)-wide buffers whose tail is identically zero,
+masked per vehicle, so no shape in the program depends on the round's rank
+selection. ``run_scanned(R)`` then lifts R rounds into one ``lax.scan`` with
+pre-staged mobility traces, channel draws and prefetched data batches — the
+host touches arrays only at the scan boundary.
+
+Exactness contract (regression-tested against the serial engine):
+  * the host stages mobility, channel fades and data batches by consuming
+    the SAME host RNG streams in the SAME order as the serial engine;
+  * first-round fresh adapters are staged from the server's key stream
+    (RSUServer draws at max_rank, rank-independently, see ``_fresh``);
+  * everything else — rank selection, training, accounting, SVD
+    redistribution, aggregation, dual updates — replays the serial maths
+    in-program, so ranks/energies/adapters match to float tolerance.
+  One caveat: if a task's FIRST round with coverage ends with zero kept
+  uploads (every vehicle departs and abandons), the serial engine redraws
+  fresh adapters next round; ``run_scanned`` has already committed its
+  staging and reuses zeros instead (the per-round ``run_round`` path stages
+  on demand and stays exact even then).
+
+Supported methods: the adaptive-rank "ours" family (ours, ours_no_energy,
+ours_no_mobility). Baselines keep the batched/serial engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import cost_model as cm
+from repro.core import energy_alloc
+from repro.core import lora as lora_lib
+from repro.core import mobility as mob
+from repro.core import ucb_dual
+from repro.core.energy_alloc import AllocState
+from repro.federated.batched_client import draw_batches
+from repro.models import transformer as T
+from repro.optim import adam, apply_updates
+
+FUSED_METHODS = ("ours", "ours_no_energy", "ours_no_mobility")
+
+
+def supports_method(method: str) -> bool:
+    return method in FUSED_METHODS
+
+
+class FusedRoundEngine:
+    """One-jit-program-per-round engine bound to an :class:`IoVSimulator`.
+
+    Owns the device-resident round carry (UCB states, merged deltas,
+    allocator state, round counter) and mirrors it back onto the simulator
+    after every round so host-side consumers (history, checkpointing,
+    ``server.eval_adapters``) stay coherent.
+    """
+
+    def __init__(self, sim, check: bool = False):
+        cfg = sim.cfg
+        if not supports_method(cfg.method):
+            raise ValueError(
+                f"engine='fused' supports methods {FUSED_METHODS}, not "
+                f"{cfg.method!r} — use the batched or serial engine")
+        self.sim = sim
+        self.cfg = cfg
+        self.check = bool(check)
+        self.spec = sim.spec
+        self.model_cfg = sim.model_cfg
+        self.lora = cfg.lora
+        self.V = cfg.num_vehicles
+        self.T = cfg.num_tasks
+        self.Rmax = cfg.lora.max_rank
+        self.steps = cfg.local_steps
+        self.opt = adam(cfg.lr)
+        self.lora_max = dataclasses.replace(cfg.lora, rank=self.Rmax)
+        self.S0 = cfg.lora.scale          # server-side merge/redistribute α/r₀
+        self.alpha = cfg.lora.alpha
+        train_dims = cm.target_dims_of(self.model_cfg, cfg.lora)
+        min_dim = min(min(d) for d in train_dims) if train_dims else 0
+        if self.Rmax > min_dim:
+            import warnings
+            warnings.warn(
+                f"lora.max_rank={self.Rmax} exceeds the smallest LoRA "
+                f"target dimension ({min_dim}): the serial engine's "
+                "truncated-SVD rank saturates at min(d1,d2) and evaluates "
+                f"with scale α/{min_dim} while the fused engine keeps "
+                f"padded max_rank buffers at scale α/{self.Rmax} — the "
+                "serial/fused equivalence contract does not hold for this "
+                "config", stacklevel=3)
+
+        # ---- per-arm lookup tables (exact: same floats the serial path
+        # reads from g_cache / adapter_payload_params) ----
+        cand = np.asarray(cfg.lora.candidate_ranks, np.int32)
+        self.cand = jnp.asarray(cand)
+        payload = np.asarray([cm.adapter_payload_params(sim.cost_dims, int(r))
+                              for r in cand], np.int64)
+        self.payload_arm_i = jnp.asarray(payload.astype(np.int32))
+        self.payload_arm_f = jnp.asarray(payload.astype(np.float32))
+        self.g_arm = jnp.asarray(
+            [sim.g_cache[int(r)] for r in cand], jnp.float32)
+
+        # ---- fleet device profiles (κ·f³ folded on host in f64 — the cube
+        # of a >1e12 FLOP/s frequency overflows f32) ----
+        self.freq = jnp.asarray([p.freq for p in sim.dev_profiles],
+                                jnp.float32)
+        self.comp_power = jnp.asarray(
+            [p.kappa * p.freq ** 3 for p in sim.dev_profiles], jnp.float32)
+        self.dev_tx = jnp.asarray([p.tx_power for p in sim.dev_profiles],
+                                  jnp.float32)
+        self.flops_ps = jnp.asarray(
+            [p.flops_per_sample for p in sim.dev_profiles], jnp.float32)
+        rsu = sim.rsu_profile
+        self.rsu_tx = float(rsu.tx_power)
+        self.agg_tau_pv = float(rsu.agg_flops_per_vehicle / rsu.freq)
+        self.agg_e_pv = float(rsu.kappa * rsu.freq ** 3 * self.agg_tau_pv)
+
+        # §IV-E step budgets / sample counts (serial: int() truncation)
+        self.steps_full = cfg.local_steps
+        self.steps_dep = max(1, int(round(cfg.local_steps
+                                          * cfg.departure_fraction)))
+        self.ns_full = int(cfg.batch_size * cfg.local_steps)
+        self.ns_dep = int(cfg.batch_size * cfg.local_steps
+                          * cfg.departure_fraction)
+
+        # data-size aggregation weights (T, V)
+        self.weights = jnp.asarray(
+            [[float(len(sim.client_data[t][v])) for v in range(self.V)]
+             for t in range(self.T)], jnp.float32)
+
+        # fixed eval batches, device-resident once
+        self.local_eval = [{k: jnp.asarray(v) for k, v in b.items()}
+                           for b in sim.local_eval]
+        self.eval_batches = [{k: jnp.asarray(v) for k, v in b.items()}
+                             for b in sim.eval_batches]
+
+        # zero templates: merged-delta tree and fleet-stacked fresh tree
+        tmpl = T.init_adapters(jax.random.PRNGKey(0), self.model_cfg,
+                               cfg.lora, rank=self.Rmax)
+        self._zero_merged = self._merged_zeros_like(tmpl)
+        self._zero_fleet = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((self.V,) + x.shape, x.dtype), tmpl)
+
+        self._carry = None
+        self._has_merged_host = [False] * self.T
+        self._jit_round = jax.jit(self._round_step)
+        self._jit_scan: Dict[int, Any] = {}
+        self.check_dev = 0.0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _merged_zeros_like(adapter_tree):
+        out = adapter_tree
+        for path in agg.tree_paths(adapter_tree):
+            ad = agg.tree_get(out, path)
+            shape = ad["a"].shape[:-1] + (ad["b"].shape[-1],)
+            out = agg.tree_set(out, path,
+                               {"delta": jnp.zeros(shape, jnp.float32)})
+        return out
+
+    # ------------------------------------------------------------------
+    def _init_carry(self):
+        sim = self.sim
+        self._carry = {
+            "ucb": [ucb_dual.UCBDualState(*map(jnp.asarray, s))
+                    for s in sim.ucb_states],
+            "merged": [self._zero_merged for _ in range(self.T)],
+            "has_merged": jnp.zeros((self.T,), bool),
+            "alloc": AllocState(
+                budgets=jnp.asarray(sim.alloc.budgets, jnp.float32),
+                difficulty=jnp.asarray(sim.alloc.difficulty, jnp.float32),
+                round=jnp.asarray(sim.alloc.round, jnp.int32)),
+            "round": jnp.asarray(sim.servers[0].round, jnp.int32),
+        }
+        self._has_merged_host = [sim.servers[t].merged is not None
+                                 for t in range(self.T)]
+        # adopt pre-existing server state (engine switch mid-run)
+        for t in range(self.T):
+            if self._has_merged_host[t]:
+                self._carry["merged"][t] = sim.servers[t].merged
+        self._carry["has_merged"] = jnp.asarray(self._has_merged_host)
+
+    # ------------------------------------------------------------------
+    # Host staging: consume the serial engine's RNG streams, same order
+    # ------------------------------------------------------------------
+    def _stage_round(self, allow_fresh: Sequence[bool]
+                     ) -> Tuple[Dict[str, Any], List[Any]]:
+        """Advance mobility one tick and stage every array the fused round
+        program needs. Returns (x, fresh_trees); fresh_trees[t] is a fleet-
+        stacked max_rank draw (zeros when not staged this round)."""
+        sim = self.sim
+        cfg = self.cfg
+        sim.mobility.step()
+        active = np.zeros((self.T, self.V), bool)
+        departing = np.zeros((self.T, self.V), bool)
+        peer = np.zeros((self.T,), bool)
+        rate_d = np.zeros((self.T, self.V), np.float64)
+        rate_u = np.zeros((self.T, self.V), np.float64)
+        counts = np.zeros((self.T, self.V), np.int32)
+        tokens: List[np.ndarray] = []
+        labels: List[np.ndarray] = []
+        fresh: List[Any] = []
+        dev_tx = np.asarray([p.tx_power for p in sim.dev_profiles])
+        for t in range(self.T):
+            view = sim.mobility.round_view(sim.rsus[t])
+            act, dep = view["active"], view["departing"]
+            active[t], departing[t] = act, dep
+            peer[t] = view["peer_available"]
+            ids = np.where(act)[0]
+            rate_d[t], rate_u[t] = sim.channel.round_rates(
+                self.rsu_tx, dev_tx, view["distances"], sim.shadow, ids)
+            counts[t] = np.where(act, np.where(dep, self.steps_dep,
+                                               self.steps_full), 0)
+            tok = None
+            lab = None
+            for v in ids:
+                b = draw_batches(sim.client_data[t][v], int(counts[t, v]),
+                                 self.steps_full)
+                if tok is None:
+                    tok = np.zeros((self.V,) + b["tokens"].shape, np.int32)
+                    lab = np.zeros((self.V,) + b["labels"].shape, np.int32)
+                tok[v] = b["tokens"]
+                lab[v] = b["labels"]
+            if tok is None:   # no coverage this round: shape from eval set
+                S = sim.task_data[t]["tokens"].shape[-1]
+                tok = np.zeros((self.V, self.steps_full, cfg.batch_size, S),
+                               np.int32)
+                lab = np.zeros((self.V, self.steps_full, cfg.batch_size),
+                               np.int32)
+            tokens.append(tok)
+            labels.append(lab)
+            if allow_fresh[t] and len(ids):
+                draws = sim.servers[t].fresh_padded(len(ids))
+                idx = jnp.asarray(ids, jnp.int32)
+                fresh.append(jax.tree_util.tree_map(
+                    lambda z, d: z.at[idx].set(d), self._zero_fleet, draws))
+            else:
+                fresh.append(self._zero_fleet)
+        x = {"active": active, "departing": departing, "peer": peer,
+             "rate_down": rate_d.astype(np.float32),
+             "rate_up": rate_u.astype(np.float32),
+             "counts": counts, "tokens": tokens, "labels": labels}
+        return x, fresh
+
+    # ------------------------------------------------------------------
+    # The fused round program (traced once; one XLA cache entry)
+    # ------------------------------------------------------------------
+    def _train_fleet(self, params, adapters, scales, tokens, labels, counts):
+        """Whole-fleet local fine-tuning: vmap over vehicles, scan over
+        local steps, Adam on the rank-padded adapter tree (frozen base).
+        Per-vehicle step budgets freeze updates past each budget (§IV-E),
+        reproducing the serial dynamics; the rank-padded tail stays
+        identically zero (see core.lora rank-padding invariant)."""
+        cfg, lora_max, opt = self.model_cfg, self.lora_max, self.opt
+        n_steps = self.steps_full
+
+        def one(ad, scale, tok, lab, n_active):
+            ost = opt.init(ad)
+
+            def body(carry, xs):
+                a, o = carry
+                batch, si = xs
+
+                def loss(p):
+                    return T.loss_fn(params, p, cfg, lora_max, batch,
+                                     scale=scale)
+
+                (_, metrics), grads = jax.value_and_grad(
+                    loss, has_aux=True)(a)
+                updates, o2 = opt.update(grads, o, a)
+                a2 = apply_updates(a, updates)
+                live = si < n_active
+                a = jax.tree_util.tree_map(
+                    lambda n, old: jnp.where(live, n, old), a2, a)
+                o = jax.tree_util.tree_map(
+                    lambda n, old: jnp.where(live, n, old), o2, o)
+                return (a, o), metrics
+
+            (ad, _), _ = jax.lax.scan(
+                body, (ad, ost),
+                ({"tokens": tok, "labels": lab},
+                 jnp.arange(n_steps, dtype=jnp.int32)))
+            return ad
+
+        return jax.vmap(one)(adapters, scales, tokens, labels, counts)
+
+    def _eval_fleet(self, params, adapters, scales, batch):
+        def ev(ad, scale):
+            _, m = T.loss_fn(params, ad, self.model_cfg, self.lora_max,
+                             batch, scale=scale)
+            return m["accuracy"]
+        return jax.vmap(ev)(adapters, scales)
+
+    def _round_step(self, carry, x, data):
+        cfg = self.cfg
+        ucb_cfg = cfg.ucb
+        mcfg = cfg.mobility
+        params = data["params"]
+        round_idx = carry["round"]
+        budgets = carry["alloc"].budgets
+
+        new_ucb, new_merged = [], []
+        has_m_out = []
+        rec: Dict[str, List[Any]] = {k: [] for k in (
+            "accuracy", "latency", "energy", "reward", "lambda", "mean_rank",
+            "active", "departing", "fallbacks", "comm_params", "n_kept")}
+        check: Dict[str, List[Any]] = {"dist": [], "new": [], "ranks": []}
+
+        for ti in range(self.T):
+            state = carry["ucb"][ti]
+            act = x["active"][ti]
+            dep = x["departing"][ti]
+
+            # 1. intra-task rank selection (Algorithm 2, vectorized)
+            arms = ucb_dual.select_ranks(state, ucb_cfg, act)
+            arm_c = jnp.clip(arms, 0, None)
+            ranks = self.cand[arm_c]                       # (V,) int32
+            scale_v = self.alpha / jnp.maximum(
+                ranks.astype(jnp.float32), 1.0)
+            rmask = lora_lib.rank_arange_mask(ranks, self.Rmax)
+
+            # 2. adapter distribution: shared seeded SVD of the merged
+            #    delta, truncated per vehicle by rank mask — or the staged
+            #    fresh draws while no aggregate exists yet
+            def dist_svd(m):
+                svd = agg.merged_svd(m, self.Rmax, seed=round_idx)
+                return agg.factors_for_ranks(svd, rmask, self.S0)
+
+            def dist_fresh(_):
+                return lora_lib.mask_adapter_tree(data["fresh"][ti], rmask)
+
+            dist = jax.lax.cond(carry["has_merged"][ti], dist_svd,
+                                dist_fresh, carry["merged"][ti])
+
+            # 3. fleet megastep: local fine-tuning + held-out local eval
+            new_ads = self._train_fleet(params, dist, scale_v,
+                                        x["tokens"][ti], x["labels"][ti],
+                                        x["counts"][ti])
+            local_acc = self._eval_fleet(params, new_ads, scale_v,
+                                         self.local_eval[ti])
+
+            # 4. §III-C four-stage costs over the staged channel
+            costs = cm.vehicle_round_costs_vec(
+                freq=self.freq, comp_power=self.comp_power,
+                tx_power=self.dev_tx, flops_per_sample=self.flops_ps,
+                rsu_tx_power=self.rsu_tx,
+                payload_params=self.payload_arm_f[arm_c],
+                bytes_per_param=cfg.bytes_per_param,
+                rate_down=x["rate_down"][ti], rate_up=x["rate_up"][ti],
+                num_samples=jnp.where(dep, self.ns_dep, self.ns_full),
+                g=self.g_arm[arm_c])
+
+            # 5. §IV-E fallback decisions for predicted departures
+            if self.spec.mobility_aware:
+                q_star = mcfg.accuracy_threshold
+                c0 = ucb_cfg.gamma * jnp.maximum(0.0, q_star - local_acc)
+                c1 = jnp.where(x["peer"][ti],
+                               ucb_cfg.alpha * mcfg.migration_latency
+                               + mcfg.beta * mcfg.migration_energy,
+                               jnp.inf)
+                c2 = mcfg.beta * costs["e_comp"] + ucb_cfg.gamma * q_star
+                strat = jnp.argmin(
+                    jnp.stack([c0, jnp.broadcast_to(c1, c0.shape), c2],
+                              axis=-1), axis=-1)
+                migrate = dep & (strat == mob.MIGRATE)
+                abandon = dep & (strat == mob.ABANDON)
+                extra_e = jnp.where(migrate, mcfg.migration_energy, 0.0)
+                extra_tau = jnp.where(migrate, mcfg.migration_latency, 0.0)
+                contribute = act & ~abandon
+                fb = jnp.sum((act & dep)[:, None]
+                             * jax.nn.one_hot(strat, 3, dtype=jnp.int32),
+                             axis=0)
+            else:
+                contribute = act & ~dep
+                extra_e = extra_tau = jnp.zeros((self.V,), jnp.float32)
+                fb = jnp.zeros((3,), jnp.int32)
+
+            e_v = costs["energy"] + extra_e
+            tau_v = costs["latency"] + extra_tau
+            per_v_energy = jnp.where(act, e_v, 0.0)
+            per_v_reward = jnp.where(
+                act, ucb_dual.reward(ucb_cfg, local_acc, tau_v), 0.0)
+            n_active = jnp.sum(act)
+            n_kept = jnp.sum(contribute)
+
+            # 6. rank-padded fleet aggregation (zero-weight lanes are
+            #    exact no-ops); empty rounds leave the merged delta alone
+            w = jnp.where(contribute, self.weights[ti], 0.0)
+            merged_new = agg.aggregate_merged_padded(new_ads, w, self.S0)
+            keep = n_kept > 0
+            merged_out = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(keep, n, o), merged_new,
+                carry["merged"][ti])
+            has_m = carry["has_merged"][ti] | keep
+
+            # 7. global eval on the task's held-out set (seed-0 SVD at
+            #    max_rank — the serial engine's eval_adapters view)
+            def do_eval(m):
+                gad = agg.factors_full(
+                    agg.merged_svd(m, self.Rmax, seed=0), self.S0)
+                _, met = T.loss_fn(params, gad, self.model_cfg,
+                                   self.lora_max, self.eval_batches[ti],
+                                   scale=self.alpha / self.Rmax)
+                return met["accuracy"]
+
+            acc = jax.lax.cond(keep, do_eval,
+                               lambda m: jnp.zeros((), jnp.float32),
+                               merged_out)
+
+            # 8. dual update with the task's current budget
+            state_new, info = ucb_dual.update(
+                state, ucb_cfg, arms, per_v_reward, per_v_energy,
+                budgets[ti].astype(jnp.float32))
+
+            tau_agg = self.agg_tau_pv * n_kept
+            e_agg = self.agg_e_pv * n_kept
+
+            def mmax(a):
+                return jnp.max(jnp.where(act, a, -jnp.inf))
+
+            lat = jnp.where(
+                n_active > 0,
+                mmax(costs["tau_down"]) + mmax(costs["tau_comp"])
+                + mmax(costs["tau_up"]) + tau_agg, 0.0)
+            e_t = jnp.sum(per_v_energy) + e_agg
+            reward_t = (ucb_cfg.gamma * acc
+                        - ucb_cfg.alpha * lat / ucb_cfg.latency_ref)
+            mean_rank = jnp.where(
+                n_active > 0,
+                jnp.sum(jnp.where(act, ranks, 0)).astype(jnp.float32)
+                / jnp.maximum(n_active, 1), 0.0)
+            comm = jnp.sum(jnp.where(contribute, self.payload_arm_i[arm_c],
+                                     0))
+
+            new_ucb.append(state_new)
+            new_merged.append(merged_out)
+            has_m_out.append(has_m)
+            rec["accuracy"].append(acc)
+            rec["latency"].append(lat)
+            rec["energy"].append(e_t)
+            rec["reward"].append(reward_t)
+            rec["lambda"].append(info["lambda"])
+            rec["mean_rank"].append(mean_rank)
+            rec["active"].append(n_active.astype(jnp.int32))
+            rec["departing"].append(jnp.sum(dep).astype(jnp.int32))
+            rec["fallbacks"].append(fb)
+            rec["comm_params"].append(comm)
+            rec["n_kept"].append(n_kept.astype(jnp.int32))
+            if self.check:
+                check["dist"].append(dist)
+                check["new"].append(new_ads)
+                check["ranks"].append(ranks)
+
+        consumed = jnp.stack(rec["energy"])
+        accs = jnp.stack(rec["accuracy"])
+        alloc = carry["alloc"]
+        if self.spec.energy_scheduler:
+            alloc = energy_alloc.step_scan(alloc, cfg.energy, consumed, accs)
+        else:
+            alloc = AllocState(budgets=alloc.budgets,
+                               difficulty=alloc.difficulty,
+                               round=alloc.round + 1)
+
+        out_carry = {"ucb": new_ucb, "merged": new_merged,
+                     "has_merged": jnp.stack(has_m_out),
+                     "alloc": alloc, "round": round_idx + 1}
+        out_rec = {k: jnp.stack(v) for k, v in rec.items()}
+        out_rec["budgets"] = budgets
+        if self.check:
+            out_rec["check"] = check
+        return out_carry, out_rec
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def run_round(self) -> Dict[str, Any]:
+        """One communication round through the single jitted round program.
+        Host work is staging (mobility tick, channel draws, data batches)
+        and the small record fetch — no per-group dispatch, no thread pool,
+        no recompilation under churn."""
+        if self._carry is None:
+            self._init_carry()
+        x, fresh = self._stage_round(
+            [not hm for hm in self._has_merged_host])
+        data = {"params": self.sim.params, "fresh": fresh}
+        self._carry, rec = self._jit_round(self._carry, x, data)
+        if self.check:
+            self._run_check(x, rec.pop("check"))
+        host = jax.device_get({k: v for k, v in rec.items() if k != "check"})
+        out = self._record(host)
+        self._sync_sim()
+        return out
+
+    def run_scanned(self, rounds: int) -> List[Dict[str, Any]]:
+        """R rounds in ONE ``lax.scan``-wrapped XLA call: all mobility
+        traces, channel draws and data batches are pre-staged, so the host
+        is not consulted between rounds at all."""
+        if self.check:
+            # the serial replay needs per-round host control (and scanning
+            # would stack every round's fleet adapter trees into the scan
+            # outputs) — fail loudly rather than report check_dev=0.0
+            raise ValueError("engine='fused_check' verifies round by round;"
+                             " use run()/run_round(), not run_scanned()")
+        if self._carry is None:
+            self._init_carry()
+        xs_list, fresh_const = [], None
+        fresh_round = np.full((self.T,), -1, np.int64)
+        staged = [False] * self.T
+        for r in range(rounds):
+            allow = [not self._has_merged_host[t] and not staged[t]
+                     for t in range(self.T)]
+            x, fresh = self._stage_round(allow)
+            for t in range(self.T):
+                if allow[t] and x["active"][t].any():
+                    staged[t] = True
+                    fresh_round[t] = int(np.asarray(self._carry["round"])) + r
+                    if fresh_const is None:
+                        fresh_const = [self._zero_fleet] * self.T
+                    fresh_const = list(fresh_const)
+                    fresh_const[t] = fresh[t]
+            xs_list.append(x)
+        if fresh_const is None:
+            fresh_const = [self._zero_fleet] * self.T
+        xs = {
+            "active": np.stack([x["active"] for x in xs_list]),
+            "departing": np.stack([x["departing"] for x in xs_list]),
+            "peer": np.stack([x["peer"] for x in xs_list]),
+            "rate_down": np.stack([x["rate_down"] for x in xs_list]),
+            "rate_up": np.stack([x["rate_up"] for x in xs_list]),
+            "counts": np.stack([x["counts"] for x in xs_list]),
+            "tokens": [np.stack([x["tokens"][t] for x in xs_list])
+                       for t in range(self.T)],
+            "labels": [np.stack([x["labels"][t] for x in xs_list])
+                       for t in range(self.T)],
+        }
+        data = {"params": self.sim.params, "fresh": fresh_const,
+                "fresh_round": jnp.asarray(fresh_round, jnp.int32)}
+        fn = self._scan_fn(rounds)
+        self._carry, recs = fn(self._carry, xs, data)
+        host = jax.device_get(recs)
+        outs = []
+        for r in range(rounds):
+            outs.append(self._record(jax.tree_util.tree_map(
+                lambda a: a[r], host)))
+        self._sync_sim()
+        return outs
+
+    def _scan_fn(self, rounds: int):
+        if rounds not in self._jit_scan:
+            def body_of(data):
+                def body(carry, x):
+                    usef = ((~carry["has_merged"])
+                            & (carry["round"] == data["fresh_round"]))
+                    fresh = [jax.tree_util.tree_map(
+                        lambda f: f * usef[t].astype(f.dtype),
+                        data["fresh"][t]) for t in range(self.T)]
+                    d = {"params": data["params"], "fresh": fresh}
+                    return self._round_step(carry, x, d)
+                return body
+
+            @jax.jit
+            def run(carry, xs, data):
+                return jax.lax.scan(body_of(data), carry, xs)
+
+            self._jit_scan[rounds] = run
+        return self._jit_scan[rounds]
+
+    # ------------------------------------------------------------------
+    def _record(self, h: Dict[str, Any]) -> Dict[str, Any]:
+        """Shape one round's device outputs into the serial history schema."""
+        sim = self.sim
+        tasks = []
+        for ti in range(self.T):
+            tasks.append({
+                "task": sim.tasks[ti].name,
+                "accuracy": float(h["accuracy"][ti]),
+                "latency": float(h["latency"][ti]),
+                "energy": float(h["energy"][ti]),
+                "reward": float(h["reward"][ti]),
+                "lambda": float(h["lambda"][ti]),
+                "mean_rank": float(h["mean_rank"][ti]),
+                "active": int(h["active"][ti]),
+                "departing": int(h["departing"][ti]),
+                "fallbacks": {i: int(h["fallbacks"][ti][i])
+                              for i in range(3)},
+                "comm_params": int(h["comm_params"][ti]),
+                "budget": float(h["budgets"][ti]),
+            })
+            if int(h["n_kept"][ti]) > 0:
+                self._has_merged_host[ti] = True
+        rec = {
+            "round": len(sim.history),
+            "tasks": tasks,
+            "budgets": [float(b) for b in h["budgets"]],
+            "reward": float(sum(t["reward"] for t in tasks)),
+            "energy": float(sum(t["energy"] for t in tasks)),
+            "latency": float(max((t["latency"] for t in tasks),
+                                 default=0.0)),
+            "accuracy": float(np.mean([t["accuracy"] for t in tasks])),
+        }
+        sim.history.append(rec)
+        return rec
+
+    def _sync_sim(self) -> None:
+        """Mirror the device carry back onto the simulator so host-side
+        consumers (checkpointing, eval_adapters, summary) stay coherent."""
+        sim = self.sim
+        c = self._carry
+        sim.ucb_states = list(c["ucb"])
+        sim.alloc = AllocState(budgets=c["alloc"].budgets,
+                               difficulty=c["alloc"].difficulty,
+                               round=int(c["alloc"].round))
+        r = int(c["round"])
+        for t in range(self.T):
+            if self._has_merged_host[t]:
+                sim.servers[t].load_merged(c["merged"][t], r)
+            else:
+                sim.servers[t].round = r
+
+    # ------------------------------------------------------------------
+    def _run_check(self, x, check) -> None:
+        """fused_check: replay the serial LocalTrainer on the identical
+        staged batches and distributed adapters; record the max adapter
+        deviation (the batched_check machinery, extended to fused)."""
+        sim = self.sim
+        dev = 0.0
+        for ti in range(self.T):
+            ids = np.where(x["active"][ti])[0]
+            if not len(ids):
+                continue
+            ranks = np.asarray(check["ranks"][ti])
+            for v in ids:
+                r = int(ranks[v])
+                lane = jax.tree_util.tree_map(lambda a: a[v],
+                                              check["dist"][ti])
+                ref_in = lora_lib.truncate_adapter_tree(lane, r)
+                n = int(x["counts"][ti][v])
+                per_step = [{"tokens": x["tokens"][ti][v][si],
+                             "labels": x["labels"][ti][v][si]}
+                            for si in range(n)]
+                ref_ad, _ = sim.trainer.finetune(
+                    sim.params, ref_in, None, n, batches=per_step)
+                got = lora_lib.truncate_adapter_tree(
+                    jax.tree_util.tree_map(lambda a: a[v],
+                                           check["new"][ti]), r)
+                for ga, rb in zip(jax.tree_util.tree_leaves(got),
+                                  jax.tree_util.tree_leaves(ref_ad)):
+                    dev = max(dev, float(jnp.max(jnp.abs(ga - rb))))
+        self.check_dev = max(self.check_dev, dev)
+        self.sim.engine_check_dev = max(self.sim.engine_check_dev, dev)

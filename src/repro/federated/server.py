@@ -48,8 +48,36 @@ class RSUServer:
 
     # ------------------------------------------------------------------
     def _fresh(self, rank: int):
+        """Fresh adapter tree at `rank`: drawn at max_rank, then truncated.
+
+        Drawing at max_rank makes the random values RANK-INDEPENDENT (the
+        first η columns of the max_rank draw), which is what lets the fused
+        engine pre-stage first-round adapters before the in-program UCB has
+        selected any ranks — its rank-masked padded view of the same draw is
+        elementwise identical to this truncation.
+        """
         self.key, k = jax.random.split(self.key)
-        return T.init_adapters(k, self.cfg, self.lora, rank=rank)
+        full = T.init_adapters(k, self.cfg, self.lora, rank=self.lora.max_rank)
+        if rank == self.lora.max_rank:
+            return full
+        return agg.hetlora_truncate(full, rank)
+
+    def fresh_padded(self, n: int):
+        """Consume the key stream exactly as `n` :meth:`_fresh` calls would
+        and return the n max_rank draws as one fleet-stacked tree (fused
+        engine round-0 staging; the engine rank-masks it in-program)."""
+        trees = []
+        for _ in range(n):
+            self.key, k = jax.random.split(self.key)
+            trees.append(T.init_adapters(k, self.cfg, self.lora,
+                                         rank=self.lora.max_rank))
+        return agg_stack(trees) if trees else None
+
+    def load_merged(self, merged, round_: int) -> None:
+        """Adopt server state computed off-host (the fused engine's carry),
+        so host-side consumers (eval_adapters, distribute) stay coherent."""
+        self.merged = merged
+        self.round = int(round_)
 
     def distribute(self, ranks: Sequence[int]) -> List[Any]:
         """One adapter tree per participating vehicle."""

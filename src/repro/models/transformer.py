@@ -321,12 +321,16 @@ def _embed(params, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, int]:
 
 def forward_hidden(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
                    batch: Dict, *, sliding_window=None, remat: bool = False,
-                   constrain=None, scan_unroll: int = 1
+                   constrain=None, scan_unroll: int = 1, scale=None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Backbone forward returning final-norm hidden states (B, S, d) and
     aux loss — the lm_head is applied by the caller (loss_fn may chunk it
-    over the sequence to bound logits memory)."""
-    scale = lora.scale
+    over the sequence to bound logits memory).
+
+    scale: optional override of lora.scale. May be a traced scalar — the
+    fused round engine passes a per-vehicle α/η under vmap so one compiled
+    program covers every candidate rank."""
+    scale = lora.scale if scale is None else scale
     x, _ = _embed(params, cfg, batch)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
@@ -361,7 +365,7 @@ def forward_hidden(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
 
 def forward(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
             batch: Dict, *, sliding_window=None, remat: bool = False,
-            constrain=None, scan_unroll: int = 1
+            constrain=None, scan_unroll: int = 1, scale=None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-sequence causal forward (train / prefill).
 
@@ -375,7 +379,8 @@ def forward(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
     """
     x, aux_total = forward_hidden(
         params, adapters, cfg, lora, batch, sliding_window=sliding_window,
-        remat=remat, constrain=constrain, scan_unroll=scan_unroll)
+        remat=remat, constrain=constrain, scan_unroll=scan_unroll,
+        scale=scale)
     logits = _lm_head(params, cfg, x)
     return logits, aux_total
 
@@ -656,7 +661,7 @@ def _decode_mamba_with_shared(seg_p, seg_ad, x, cfg, scale, positions, n,
 
 def loss_fn(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
             batch: Dict, *, remat: bool = False, constrain=None,
-            scan_unroll: int = 1, ce_chunk: int = 0
+            scan_unroll: int = 1, ce_chunk: int = 0, scale=None
             ) -> Tuple[jnp.ndarray, Dict]:
     """Next-token CE (or classification CE when batch has "labels" of rank 1).
 
@@ -668,7 +673,7 @@ def loss_fn(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
     """
     hidden, aux = forward_hidden(params, adapters, cfg, lora, batch,
                                  remat=remat, constrain=constrain,
-                                 scan_unroll=scan_unroll)
+                                 scan_unroll=scan_unroll, scale=scale)
     labels = batch["labels"]
     if labels.ndim == 1:
         # classification: use the last position's logits

@@ -41,3 +41,26 @@ class ChannelModel:
                 / (c.noise_density * c.bandwidth_hz + c.interference))
         r = c.bandwidth_hz * np.log2(1.0 + sinr)
         return np.maximum(r, c.min_rate)
+
+    def round_rates(self, rsu_tx_power: float, dev_tx_powers: np.ndarray,
+                    distances: np.ndarray, shadow: np.ndarray,
+                    active_ids: np.ndarray) -> "tuple[np.ndarray, np.ndarray]":
+        """Per-round link rates for one task, drawn in the CANONICAL order:
+        for each active vehicle (ascending id) the downlink fade first, then
+        the uplink. Every engine (serial, batched, fused staging) draws
+        through here, so the Rayleigh stream is engine-independent — the
+        cross-engine regression tests compare energy accounting to float
+        tolerance, which requires identical fades.
+
+        Returns ((V,) rate_down, (V,) rate_up); inactive lanes hold the
+        config min_rate (they are masked downstream, but must stay finite
+        for the fused engine's dense arithmetic).
+        """
+        V = len(distances)
+        down = np.full(V, self.cfg.min_rate, np.float64)
+        up = np.full(V, self.cfg.min_rate, np.float64)
+        for v in active_ids:
+            down[v] = float(self.rate(rsu_tx_power, distances[v], shadow[v]))
+            up[v] = float(self.rate(dev_tx_powers[v], distances[v],
+                                    shadow[v]))
+        return down, up

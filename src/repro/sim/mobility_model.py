@@ -110,6 +110,29 @@ class MobilityModel:
         d_future = np.linalg.norm(future - np.asarray(rsu.xy), axis=1)
         return (d_future > rsu.radius) & self.in_coverage(rsu)
 
+    def round_view(self, rsu: RSU, horizon_s: Optional[float] = None) -> dict:
+        """Everything one task round needs from mobility, in one snapshot:
+        coverage, predicted departures, distances and peer availability.
+
+        Shared by the serial planner and the fused engine's round staging so
+        both consume identical geometry (the fused engine ships these arrays
+        straight into its jit program).
+        """
+        h = self.cfg.dt if horizon_s is None else horizon_s
+        active = self.in_coverage(rsu)
+        departing = (self.predict_departure(rsu, h) if active.any()
+                     else np.zeros(self.cfg.num_vehicles, bool))
+        staying = active & ~departing
+        return {
+            "active": active,
+            "departing": departing,
+            "staying": staying,
+            "distances": self.distances_to(rsu),
+            # §IV-E migration target exists iff any in-coverage vehicle is
+            # predicted to stay (a departing vehicle is never its own peer)
+            "peer_available": bool(staying.any()),
+        }
+
     def nearby_peer(self, rsu: RSU, vehicle: int,
                     staying: np.ndarray) -> Optional[int]:
         """Closest in-coverage vehicle predicted to stay (migration target)."""

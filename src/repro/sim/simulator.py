@@ -17,6 +17,7 @@ configurable (DESIGN.md §4, EXPERIMENTS.md records settings).
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -63,11 +64,19 @@ class SimConfig:
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     departure_fraction: float = 0.5   # fraction of local steps done at exit
     bytes_per_param: int = 4
-    # round engine: "batched" runs each rank group's local fine-tuning as one
-    # vmap×scan jit call and aggregates stacked groups; "serial" is the
-    # per-vehicle reference loop; "batched_check" runs both on identical
-    # data and records the max adapter deviation (self.engine_check_dev).
-    engine: str = "batched"
+    # round engine:
+    #   "fused"   — ONE jit program per round over the whole rank-padded
+    #               fleet (federated.fused_engine; "ours"-family methods);
+    #   "batched" — one vmap×scan jit call per (task, rank) group plus
+    #               grouped aggregation;
+    #   "serial"  — the per-vehicle reference loop;
+    #   "batched_check"/"fused_check" — run the engine, then replay the
+    #               serial reference on identical data and record the max
+    #               adapter deviation (self.engine_check_dev).
+    # None (default) resolves to $REPRO_SIM_ENGINE or "batched"; the
+    # resolved auto choice falls back from fused to batched for methods the
+    # fused engine does not cover (an EXPLICIT engine="fused" raises).
+    engine: Optional[str] = None
 
 
 class IoVSimulator:
@@ -84,8 +93,10 @@ class IoVSimulator:
         self.model_cfg = cfg.train_arch
         key = jax.random.PRNGKey(cfg.seed)
         self.params = T.init_params(key, self.model_cfg, dtype=jnp.float32)
-        if cfg.engine not in ("serial", "batched", "batched_check"):
-            raise ValueError(f"unknown engine {cfg.engine!r}")
+        # resolved choice lives on the simulator — never written back into
+        # the caller's config (a reused SimConfig must keep engine=None so
+        # later sims still pick up $REPRO_SIM_ENGINE)
+        self.engine = self._resolve_engine(cfg)
         self.trainer = LocalTrainer(self.model_cfg, cfg.lora, lr=cfg.lr)
         self.batched_trainer = BatchedLocalTrainer(
             self.model_cfg, cfg.lora, lr=cfg.lr, max_steps=cfg.local_steps)
@@ -162,6 +173,31 @@ class IoVSimulator:
             cfg.lora.candidate_ranks,
             np.array([p.freq for p in self.dev_profiles]))
 
+        # --- fused engine (one jit program per round; see fused_engine) ---
+        self.fused = None
+        if self.engine in ("fused", "fused_check"):
+            from repro.federated.fused_engine import FusedRoundEngine
+            self.fused = FusedRoundEngine(
+                self, check=(self.engine == "fused_check"))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _resolve_engine(cfg: SimConfig) -> str:
+        from repro.federated.fused_engine import supports_method
+        engine = cfg.engine or os.environ.get("REPRO_SIM_ENGINE", "batched")
+        known = ("serial", "batched", "batched_check", "fused",
+                 "fused_check")
+        if engine not in known:
+            raise ValueError(f"unknown engine {engine!r}; have {known}")
+        if (engine in ("fused", "fused_check")
+                and not supports_method(cfg.method)):
+            if cfg.engine is None:   # auto (env) choice: fall back
+                return "batched"
+            raise ValueError(
+                f"engine={engine!r} does not support method "
+                f"{cfg.method!r}; use engine='batched' or 'serial'")
+        return engine
+
     # ------------------------------------------------------------------
     def _select_ranks(self, ti: int, active: np.ndarray) -> np.ndarray:
         cfg = self.cfg
@@ -192,8 +228,16 @@ class IoVSimulator:
         The channel fading RNG is consumed only in phase 3, in a fixed
         per-task, per-vehicle order — so the serial and batched engines see
         identical randomness (regression-tested).
+
+        The fused engine replaces all three phases with one jit-compiled
+        round program (federated.fused_engine) and only shares the host
+        staging (mobility tick, channel draws, data batches) with this
+        path — consuming identical RNG streams, so engines can be compared
+        round-for-round and even switched mid-run.
         """
         cfg = self.cfg
+        if self.fused is not None:
+            return self.fused.run_round()
         self.mobility.step()
         budgets = np.asarray(self.alloc.budgets)
         rec: Dict[str, Any] = {"round": len(self.history), "tasks": []}
@@ -226,15 +270,12 @@ class IoVSimulator:
         """Phase 1: everything a task round needs before training starts."""
         cfg = self.cfg
         rsu = self.rsus[ti]
-        active = self.mobility.in_coverage(rsu)
+        view = self.mobility.round_view(rsu)   # same snapshot fused stages
+        active = view["active"]
         ranks, arms = self._select_ranks(ti, active)
         active_ids = np.where(active)[0]
-        departing = (self.mobility.predict_departure(
-            rsu, self.mobility.cfg.dt) if len(active_ids) else
-            np.zeros(cfg.num_vehicles, bool))
-        staying = np.zeros(cfg.num_vehicles, bool)
-        staying[active_ids] = True
-        staying &= ~departing
+        departing = view["departing"]
+        staying = view["staying"]
         adapters_list = self.servers[ti].distribute(
             [int(ranks[v]) for v in active_ids])
         fedra_masks = (self.servers[ti].masks if cfg.method == "fedra" else
@@ -288,7 +329,7 @@ class IoVSimulator:
             recorded in self.engine_check_dev.
         """
         cfg = self.cfg
-        if cfg.engine == "serial":
+        if self.engine == "serial":
             return [self._train_serial(p) for p in plans]
 
         results: List[Dict[str, Any]] = []
@@ -331,7 +372,7 @@ class IoVSimulator:
             accs = marr.get("eval_accuracy", marr.get("accuracy"))
             for j, i in enumerate(idxs):
                 res["accs"][i] = accs[j]
-        if cfg.engine == "batched_check":
+        if self.engine == "batched_check":
             self._check_against_serial(plans, results)
         return results
 
@@ -377,6 +418,12 @@ class IoVSimulator:
         ranks, arms = plan["ranks"], plan["arms"]
         departing, staying = plan["departing"], plan["staying"]
         dists = self.mobility.distances_to(rsu)
+        # one canonical pass over the fading RNG (shared with the fused
+        # engine's staging — identical draws in identical order)
+        rate_down_v, rate_up_v = self.channel.round_rates(
+            self.rsu_profile.tx_power,
+            np.asarray([p.tx_power for p in self.dev_profiles]),
+            dists, self.shadow, active_ids)
 
         kept_idx: List[int] = []         # positions within the active list
         kept_weights: List[float] = []
@@ -396,13 +443,10 @@ class IoVSimulator:
                     if i < len(plan["fedra_masks"]) else None)
             local_acc = float(tr["accs"][i])
 
-            # §III-C costs over the real channel. NOTE: call order fixed by
-            # active_ids so the fading RNG stream is engine-independent.
+            # §III-C costs over the real channel (fades pre-drawn above)
             devp = self.dev_profiles[v]
-            rate_d = float(self.channel.rate(self.rsu_profile.tx_power,
-                                             dists[v], self.shadow[v]))
-            rate_u = float(self.channel.rate(devp.tx_power, dists[v],
-                                             self.shadow[v]))
+            rate_d = float(rate_down_v[v])
+            rate_u = float(rate_up_v[v])
             payload = cm.adapter_payload_params(self.cost_dims, rank)
             g = self.g_cache.get(rank, cm.g_factor(self.cost_cfg, cfg.lora,
                                                    rank))
@@ -530,6 +574,20 @@ class IoVSimulator:
                 "masks": masks,
                 "indices": gi + [gi[0]] * npad})
         server.aggregate_grouped(gspecs)
+
+    # ------------------------------------------------------------------
+    def run_scanned(self, rounds: Optional[int] = None
+                    ) -> List[Dict[str, Any]]:
+        """Fused engine only: execute `rounds` communication rounds as ONE
+        `lax.scan`-wrapped XLA call. Mobility traces, channel draws and data
+        batches are pre-staged on the host (consuming the same RNG streams
+        as per-round execution), then the device runs every round without
+        host involvement. Appends to and returns self.history."""
+        if self.fused is None:
+            raise ValueError(
+                "run_scanned requires engine='fused' "
+                f"(engine={self.engine!r})")
+        return self.fused.run_scanned(rounds or self.cfg.rounds)
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0

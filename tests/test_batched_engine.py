@@ -206,6 +206,47 @@ def test_grouped_residual_aggregation_matches_serial():
         assert _max_dev(sa.merged, sb.merged) < 1e-5, rnd
 
 
+def test_trainer_caches_stay_bounded_over_rounds():
+    """The id()-keyed eval/params caches must not accumulate strong
+    references across rounds: 20 rounds with fresh eval-batch dicts and
+    re-materialized params trees keep both caches at their bounds."""
+    cfg = _tiny_cfg()
+    params = T.init_params(jax.random.PRNGKey(4), cfg, dtype=jnp.float32)
+    dss, _ = _data(cfg, 1, seed=9)
+    ad = T.init_adapters(jax.random.PRNGKey(50), cfg, LORA, rank=4)
+    batched = BatchedLocalTrainer(cfg, LORA, lr=5e-3, max_steps=1)
+    sizes = []
+    for rnd in range(20):
+        # fresh host objects every round — the leak scenario
+        evb = {"tokens": np.asarray(dss[0].tokens[:8]),
+               "labels": np.asarray(dss[0].labels[:8])}
+        params_rt = jax.tree_util.tree_map(lambda x: x + 0.0, params)
+        batches = [draw_batches(dss[0], 1, 1)]
+        batched.finetune_group_stacked(params_rt, [ad], batches, [1],
+                                       eval_batch=evb)
+        sizes.append((len(batched._eval_cache), len(batched._params_dev)))
+    evs, pds = zip(*sizes)
+    assert max(evs) <= batched._eval_cache.maxsize
+    assert max(pds) <= batched._params_dev.maxsize
+    # steady state: the caches stop growing (constant over the tail)
+    assert len(set(sizes[-5:])) == 1, sizes
+
+
+def test_identity_lru_identity_and_eviction():
+    from repro.federated.batched_client import IdentityLRU
+    lru = IdentityLRU(maxsize=2)
+    a, b, c = {"x": 1}, {"x": 2}, {"x": 3}
+    lru.put(a, "A")
+    lru.put(b, "B")
+    assert lru.get(a) == "A" and lru.get(b) == "B"
+    lru.put(c, "C")           # evicts a (LRU)
+    assert lru.get(a) is None and len(lru) == 2
+    # identity (not id) is what matters: a dead object's recycled id must
+    # never serve another object's value
+    lookalike = dict(b)
+    assert lru.get(lookalike) is None
+
+
 @pytest.mark.slow
 def test_sim_regression_batched_matches_serial():
     """2-round IoVSimulator: the batched engine reproduces the serial
