@@ -1,0 +1,132 @@
+"""Scenario suite: methods × scenarios sweep through the fused scanned
+engine (the paper's §V accuracy-efficiency trade-off story, told across
+mobility regimes instead of one synthetic map).
+
+Every registered scenario preset (repro.sim.scenarios) runs end-to-end via
+``IoVSimulator.run_scanned`` — the whole multi-round program as one
+``lax.scan`` XLA call per cell — for each method of the fused engine's
+"ours" family (the §V ablation axis: full system, no energy scheduler, no
+mobility fallbacks). Per cell we record the summary metrics plus fleet
+dynamics (mean/peak participation, churn), so the committed
+``BENCH_scenario_suite.json`` documents how the accuracy/energy/latency
+trade-off shifts between dense urban coverage, highway handoffs, rush-hour
+fleet waves, sparse rural dead zones and RSU outages.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.scenario_suite            # full sweep
+    PYTHONPATH=src python -m benchmarks.scenario_suite --smoke    # CI: ours only
+    PYTHONPATH=src python -m benchmarks.scenario_suite --smoke --rounds 1
+    PYTHONPATH=src python -m benchmarks.scenario_suite --scenario rush-hour
+
+Writes benchmarks/results/BENCH_scenario_suite.json (``--smoke``:
+BENCH_scenario_suite_smoke.json, archived by CI next to the fused-round
+smoke baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+FULL_METHODS = ("ours", "ours_no_energy", "ours_no_mobility")
+SMOKE_METHODS = ("ours",)
+
+
+def run_cell(scenario: str, method: str, rounds: int, seed: int
+             ) -> Dict[str, Any]:
+    """One (scenario, method) cell through the fused scanned engine."""
+    from repro.sim import scenarios
+
+    t0 = time.time()
+    sim = scenarios.build_sim(scenario, method=method, rounds=rounds,
+                              seed=seed, engine="fused")
+    build_s = time.time() - t0
+    t0 = time.time()
+    sim.run_scanned(rounds)
+    run_s = time.time() - t0
+
+    s = sim.summary(tail=min(rounds, 10))
+    hist = sim.history
+    act = np.asarray([sum(t["active"] for t in r["tasks"]) for r in hist])
+    ranks = [t["mean_rank"] for r in hist for t in r["tasks"]
+             if t["active"] > 0]
+    churn = (float(np.abs(np.diff(act)).mean()) if len(act) > 1 else 0.0)
+    return {
+        "scenario": scenario,
+        "method": method,
+        "rounds": rounds,
+        "seed": seed,
+        # accuracy-efficiency trade-off axes
+        "best_accuracy": s["best_accuracy"],
+        "cum_reward": s["cum_reward"],
+        "avg_energy": s["avg_energy"],
+        "avg_latency": s["avg_latency"],
+        "avg_comm_params": s["avg_comm_params"],
+        "mean_rank": float(np.mean(ranks)) if ranks else 0.0,
+        # fleet dynamics (what distinguishes the regimes)
+        "mean_active": float(act.mean()),
+        "peak_active": int(act.max()),
+        "empty_rounds": int((act == 0).sum()),
+        "participation_churn": churn,
+        "build_s": round(build_s, 2),
+        "run_s": round(run_s, 2),
+        "round_s": round(run_s / max(rounds, 1), 4),
+    }
+
+
+def main(smoke: bool = False, rounds: Optional[int] = None,
+         only: Optional[Sequence[str]] = None, seed: int = 0
+         ) -> Dict[str, Any]:
+    from benchmarks.harness import emit_csv, save_bench_json
+    from repro.sim import scenarios
+
+    methods = SMOKE_METHODS if smoke else FULL_METHODS
+    R = rounds if rounds is not None else (2 if smoke else 10)
+    names = [n for n in scenarios.list_scenarios()
+             if not only or n in only]
+    if only:
+        missing = set(only) - set(names)
+        if missing:
+            raise SystemExit(f"unknown scenario(s): {sorted(missing)}; "
+                             f"have {scenarios.list_scenarios()}")
+
+    rows: List[Dict[str, Any]] = []
+    for name in names:
+        for method in methods:
+            cell = run_cell(name, method, R, seed)
+            rows.append(dict(cell, name=f"{name}/{method}"))
+            print(f"# {name:17s} {method:16s} acc={cell['best_accuracy']:.3f}"
+                  f" E={cell['avg_energy']:7.1f}J lat={cell['avg_latency']:5.1f}s"
+                  f" act={cell['mean_active']:.1f}"
+                  f" churn={cell['participation_churn']:.2f}"
+                  f" ({cell['run_s']:.0f}s)")
+
+    emit_csv("scenario_suite (fused scanned engine)", rows,
+             ["best_accuracy", "avg_energy", "avg_latency",
+              "avg_comm_params", "mean_rank", "mean_active",
+              "participation_churn", "empty_rounds", "round_s"])
+    out = {
+        "results": rows,
+        "config": {"methods": list(methods), "scenarios": names,
+                   "rounds": R, "seed": seed, "engine": "fused_scan",
+                   "smoke": smoke},
+    }
+    bench = "scenario_suite_smoke" if smoke else "scenario_suite"
+    path = save_bench_json(bench, out)
+    print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI scale: method=ours only, short horizon")
+    p.add_argument("--rounds", type=int, default=None,
+                   help="rounds per cell (default: 10, smoke: 2)")
+    p.add_argument("--scenario", action="append", default=None,
+                   help="restrict to named preset(s); repeatable")
+    p.add_argument("--seed", type=int, default=0)
+    a = p.parse_args()
+    main(smoke=a.smoke, rounds=a.rounds, only=a.scenario, seed=a.seed)

@@ -4,10 +4,17 @@ energy budgeting, mobility fault tolerance, truncated-SVD distribution).
 
     PYTHONPATH=src python examples/multi_task_iov.py \
         [--method ours|homolora|hetlora|fedra] [--rounds 40] [--vehicles 12]
+
+Scenario presets (repro.sim.scenarios) swap the default synthetic map for a
+named mobility regime — trace-driven fleets, RSU layouts, outages:
+
+    PYTHONPATH=src python examples/multi_task_iov.py --scenario rush-hour
+    PYTHONPATH=src python examples/multi_task_iov.py --list-scenarios
 """
 import argparse
 
 from repro.config import EnergyAllocConfig
+from repro.sim import scenarios
 from repro.sim.simulator import IoVSimulator, SimConfig
 
 
@@ -20,12 +27,41 @@ def main():
     ap.add_argument("--budget", type=float, default=900.0,
                     help="global per-round energy budget E_total (J)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="named preset from repro.sim.scenarios "
+                         "(overrides fleet/area/budget defaults)")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
-    sim = IoVSimulator(SimConfig(
-        method=args.method, rounds=args.rounds, num_vehicles=args.vehicles,
-        num_tasks=args.tasks, seed=args.seed,
-        energy=EnergyAllocConfig(e_total=args.budget, warmup_q=4)))
+    if args.list_scenarios:
+        for name in scenarios.list_scenarios():
+            print(f"  {name:18s} {scenarios.get_scenario(name).description}")
+        return
+
+    if args.scenario:
+        # flags left at their defaults defer to the preset; explicitly
+        # given ones override it (never silently ignored)
+        overrides = {}
+        if args.vehicles != ap.get_default("vehicles"):
+            overrides["num_vehicles"] = args.vehicles
+        if args.tasks != ap.get_default("tasks"):
+            overrides["num_tasks"] = args.tasks
+        if args.budget != ap.get_default("budget"):
+            overrides["energy"] = EnergyAllocConfig(e_total=args.budget,
+                                                    warmup_q=4)
+        cfg = scenarios.build_config(args.scenario, method=args.method,
+                                     rounds=args.rounds, seed=args.seed,
+                                     **overrides)
+        print(f"scenario {args.scenario}: {cfg.num_vehicles} vehicles, "
+              f"{cfg.num_tasks} tasks, {cfg.rounds} rounds, "
+              f"E_total={cfg.energy.e_total:g}J")
+    else:
+        cfg = SimConfig(
+            method=args.method, rounds=args.rounds,
+            num_vehicles=args.vehicles, num_tasks=args.tasks,
+            seed=args.seed,
+            energy=EnergyAllocConfig(e_total=args.budget, warmup_q=4))
+    sim = IoVSimulator(cfg)
     sim.run(log_every=2)
 
     s = sim.summary()

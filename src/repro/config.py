@@ -248,6 +248,52 @@ class MobilityConfig:
 
 
 @dataclass(frozen=True)
+class TraceSpec:
+    """Declarative trajectory source for :class:`repro.sim.MobilityModel`.
+
+    When a :class:`MobilitySimConfig` carries a TraceSpec, the mobility model
+    replays pre-staged per-round position/presence arrays (built once by
+    ``repro.sim.trajectories.build_trace``) instead of stepping Gauss-Markov
+    dynamics online. The spec stays a small frozen dataclass so scenario
+    configs remain hashable/JSON-able; the (possibly large) arrays are
+    materialized deterministically from it.
+    """
+    kind: str = "synthetic"      # "synthetic" | "tdrive"
+    length: int = 64             # staged round ticks; replay wraps modulo
+    path: Optional[str] = None   # tdrive: path to a T-Drive format file
+    max_gap_s: float = 600.0     # tdrive: fix gaps beyond this mark the
+                                 # vehicle absent for the affected ticks
+    # --- synthetic generation (statistically matched Gauss-Markov) ---
+    mean_speed: float = 10.0     # m/s
+    speed_std: float = 3.0
+    gm_alpha: float = 0.85       # velocity memory
+    hotspot_pull: float = 0.35   # attraction toward the nearest RSU center
+    # >0: motion confined to a horizontal corridor of this fraction of the
+    # area's height (highway regime: near-1D flow, fast handoffs)
+    corridor_frac: float = 0.0
+    # --- dynamic fleet (arrival/departure slots) ---
+    # "all": whole fleet present for the full trace;
+    # "staggered": each vehicle present for one contiguous window with
+    #              uniformly staggered arrivals;
+    # "waves": rush-hour profile — arrivals ramp up to a mid-trace peak,
+    #          then the fleet drains (time-varying participation)
+    arrivals: str = "all"
+    min_dwell: int = 6           # minimum rounds a vehicle stays present
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class OutageSpec:
+    """RSU coverage outage: RSU ``rsu_id`` has zero effective radius for
+    round indices ``start <= round < end`` (0-based). Vehicles lose coverage
+    for the affected task mid-run and re-enter in a handoff storm when the
+    RSU comes back."""
+    rsu_id: int
+    start: int
+    end: int
+
+
+@dataclass(frozen=True)
 class FedConfig:
     num_tasks: int = 3
     vehicles_per_task: int = 10

@@ -33,6 +33,16 @@ Exactness contract (regression-tested against the serial engine):
   staging and reuses zeros instead (the per-round ``run_round`` path stages
   on demand and stays exact even then).
 
+Dynamic fleets (scenario subsystem, PR 3): arrival/departure slots are a
+presence mask maintained by ``MobilityModel`` (trace replay) and folded
+into the ``active`` mask that ``round_view`` hands to the staging below. An
+absent vehicle is therefore a ZERO-WEIGHT LANE of the rank-padded fleet
+arrays — zero step budget, zero aggregation weight, inactive in every
+reduction — so churning fleets (rush-hour arrivals, staged departures,
+RSU outages) reuse the exact-no-op padding invariants unchanged: no shape
+in the program depends on who is present, and serial/fused parity holds in
+churning-fleet regimes (tests/test_scenarios.py).
+
 Supported methods: the adaptive-rank "ours" family (ours, ours_no_energy,
 ours_no_mobility). Baselines keep the batched/serial engines.
 """
@@ -203,7 +213,12 @@ class FusedRoundEngine:
                      ) -> Tuple[Dict[str, Any], List[Any]]:
         """Advance mobility one tick and stage every array the fused round
         program needs. Returns (x, fresh_trees); fresh_trees[t] is a fleet-
-        stacked max_rank draw (zeros when not staged this round)."""
+        stacked max_rank draw (zeros when not staged this round).
+
+        ``round_view``'s active mask is already presence-gated (dynamic
+        fleets), so absent vehicles stage as inactive lanes: zero step
+        count, no data/channel RNG consumption — the same streams, in the
+        same order, as the serial planner sees."""
         sim = self.sim
         cfg = self.cfg
         sim.mobility.step()

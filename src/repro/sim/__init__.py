@@ -1,4 +1,8 @@
 from repro.sim.channel import ChannelModel, ChannelConfig  # noqa: F401
 from repro.sim.mobility_model import (MobilityModel, MobilitySimConfig,  # noqa: F401
                                       RSU)
+from repro.sim.scenarios import (SCENARIOS, Scenario, build_config,  # noqa: F401
+                                 build_sim, get_scenario, list_scenarios)
 from repro.sim.simulator import IoVSimulator, SimConfig  # noqa: F401
+from repro.sim.trajectories import (TraceSet, build_trace, load_tdrive,  # noqa: F401
+                                    synthesize)

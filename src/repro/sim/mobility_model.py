@@ -1,20 +1,33 @@
 """Trajectory-driven vehicular mobility with RSU coverage (paper §V-A).
 
-The T-Drive GPS traces are not shippable offline; we generate statistically
-matched synthetic trajectories (DESIGN.md §4): Gauss-Markov mobility over an
-urban area with attraction toward RSU hotspots — reproducing the properties
-the paper's simulator needs: bounded dwell times inside coverage, intermittent
-connectivity, early departures, and RSU handoffs.
+Two mobility sources, selected by :class:`MobilitySimConfig`:
+
+- **Online Gauss-Markov** (default, ``trace=None``): bounded urban area with
+  attraction toward RSU hotspots — reproducing the properties the paper's
+  simulator needs (bounded dwell times inside coverage, intermittent
+  connectivity, early departures, RSU handoffs).
+- **Trace replay** (``trace=TraceSpec(...)``): pre-staged per-round position
+  and presence arrays built once by ``repro.sim.trajectories.build_trace``
+  (T-Drive ingestion or statistically matched synthesis). Presence gives
+  DYNAMIC FLEETS: a vehicle absent at a tick is never active for any task,
+  which the round engines treat as a zero-weight lane.
+
+Coverage geometry additionally honors :class:`repro.config.OutageSpec`
+windows (an RSU in outage has zero effective radius — mid-run coverage loss
+followed by a handoff storm when it recovers).
 
 Departure *prediction* (used by §IV-E fault tolerance) extrapolates the
-current velocity over the expected round duration.
+current velocity over the expected round duration; in replay mode the
+velocity is the trace's finite difference.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+from repro.config import OutageSpec, TraceSpec
 
 
 @dataclass(frozen=True)
@@ -36,6 +49,30 @@ class MobilitySimConfig:
     dt: float = 10.0               # seconds per round tick
     coverage_radius: float = 1100.0
     seed: int = 0
+    # scenario subsystem (repro.sim.scenarios): declarative trace replay,
+    # RSU placement style, and coverage outage windows
+    trace: Optional[TraceSpec] = None
+    rsu_layout: str = "grid"       # "grid" | "corridor" | "sparse"
+    outages: Tuple[OutageSpec, ...] = ()
+
+
+def reflect_into(pos: np.ndarray, vel: np.ndarray, ax: int,
+                 lo: float, hi: float) -> None:
+    """Exact boundary reflection of ``pos[:, ax]`` into [lo, hi], in place.
+
+    Triangle-wave folding is exact for ANY overshoot (the old single-bounce
+    update left a vehicle out of bounds whenever it overshot by more than
+    the box width); velocity flips when the fold count is odd. Single-bounce
+    cases reproduce the previous arithmetic exactly, so RNG-pinned
+    regression histories are unchanged in normal speed regimes.
+    """
+    width = max(hi - lo, 1e-9)
+    p = pos[:, ax] - lo
+    m = np.mod(p, 2.0 * width)
+    refl = np.where(m > width, 2.0 * width - m, m)
+    flip = (np.floor_divide(p, width).astype(np.int64) % 2) != 0
+    pos[:, ax] = np.clip(lo + refl, lo, hi)
+    vel[flip, ax] *= -1
 
 
 class MobilityModel:
@@ -44,6 +81,19 @@ class MobilityModel:
         self.rsus = rsus
         rng = np.random.default_rng(cfg.seed)
         self._rng = rng
+        self.tick = 0                  # number of step() calls so far
+        self._trace = None
+        if cfg.trace is not None:
+            from repro.sim.trajectories import build_trace
+            self._trace = build_trace(
+                cfg.trace, area=cfg.area, num_vehicles=cfg.num_vehicles,
+                dt=cfg.dt, rsu_centers=[r.xy for r in rsus])
+            pos, pres = self._trace.at(0)
+            self.pos = np.array(pos)
+            self.vel = self._trace.velocity_at(0).copy()
+            self.present = np.array(pres)
+            return
+        self.present = np.ones(cfg.num_vehicles, bool)
         self.pos = rng.uniform(0, cfg.area, size=(cfg.num_vehicles, 2))
         angles = rng.uniform(0, 2 * np.pi, cfg.num_vehicles)
         speeds = np.abs(rng.normal(cfg.mean_speed, cfg.speed_std,
@@ -53,22 +103,62 @@ class MobilityModel:
 
     @staticmethod
     def place_rsus(num_tasks: int, area: float, radius: float,
-                   seed: int = 0) -> List[RSU]:
-        """RSUs at traffic hotspots: jittered grid positions."""
+                   seed: int = 0, layout: str = "grid") -> List[RSU]:
+        """RSU placement, clipped into [0, area] (Gaussian jitter used to
+        silently push edge RSUs out of the map, shrinking their coverage).
+
+        layouts:
+          - "grid": jittered grid positions (traffic hotspots; default)
+          - "corridor": evenly spaced along the mid-height horizontal
+            corridor (highway deployments)
+          - "sparse": uniform random draws rejected toward spread (rural
+            deployments with large inter-RSU gaps)
+        """
         rng = np.random.default_rng(seed + 17)
-        side = int(np.ceil(np.sqrt(num_tasks)))
         rsus = []
-        for t in range(num_tasks):
-            gx, gy = t % side, t // side
-            x = (gx + 0.5) / side * area + rng.normal(0, area * 0.05)
-            y = (gy + 0.5) / side * area + rng.normal(0, area * 0.05)
-            rsus.append(RSU(rsu_id=t, xy=(float(x), float(y)),
-                            radius=radius, task_id=t))
-        return rsus
+        if layout == "grid":
+            side = int(np.ceil(np.sqrt(num_tasks)))
+            for t in range(num_tasks):
+                gx, gy = t % side, t // side
+                x = (gx + 0.5) / side * area + rng.normal(0, area * 0.05)
+                y = (gy + 0.5) / side * area + rng.normal(0, area * 0.05)
+                rsus.append((x, y))
+        elif layout == "corridor":
+            for t in range(num_tasks):
+                x = (t + 0.5) / num_tasks * area + rng.normal(0, area * 0.02)
+                y = area / 2.0 + rng.normal(0, area * 0.03)
+                rsus.append((x, y))
+        elif layout == "sparse":
+            pts: List[Tuple[float, float]] = []
+            for _ in range(num_tasks):
+                best, best_d = None, -1.0
+                for _try in range(16):   # farthest-of-16 spreads the sites
+                    cand = tuple(rng.uniform(0.15 * area, 0.85 * area, 2))
+                    d = min((np.hypot(cand[0] - p[0], cand[1] - p[1])
+                             for p in pts), default=np.inf)
+                    if d > best_d:
+                        best, best_d = cand, d
+                pts.append(best)
+            rsus = pts
+        else:
+            raise ValueError(f"unknown rsu_layout {layout!r}; "
+                             "have ('grid', 'corridor', 'sparse')")
+        return [RSU(rsu_id=t,
+                    xy=(float(np.clip(x, 0.0, area)),
+                        float(np.clip(y, 0.0, area))),
+                    radius=radius, task_id=t)
+                for t, (x, y) in enumerate(rsus)]
 
     # -- dynamics ---------------------------------------------------------
     def step(self) -> None:
         c = self.cfg
+        self.tick += 1
+        if self._trace is not None:
+            pos, pres = self._trace.at(self.tick)
+            self.pos = np.array(pos)
+            self.vel = self._trace.velocity_at(self.tick).copy()
+            self.present = np.array(pres)
+            return
         rng = self._rng
         # Gauss-Markov velocity update
         noise = rng.normal(0, c.speed_std, self.vel.shape)
@@ -76,13 +166,8 @@ class MobilityModel:
                     + (1 - c.gm_alpha) * self._drift()
                     + np.sqrt(1 - c.gm_alpha ** 2) * noise)
         self.pos = self.pos + self.vel * c.dt
-        # reflect at boundaries
         for ax in range(2):
-            low = self.pos[:, ax] < 0
-            high = self.pos[:, ax] > c.area
-            self.pos[low, ax] *= -1
-            self.pos[high, ax] = 2 * c.area - self.pos[high, ax]
-            self.vel[low | high, ax] *= -1
+            reflect_into(self.pos, self.vel, ax, 0.0, c.area)
 
     def _drift(self) -> np.ndarray:
         """Mean velocity: toward the nearest hotspot (traffic attraction)."""
@@ -97,18 +182,31 @@ class MobilityModel:
         return c.hotspot_pull * c.mean_speed * dirn / norm
 
     # -- coverage queries --------------------------------------------------
+    @property
+    def round_idx(self) -> int:
+        """0-based index of the round the current tick belongs to (the
+        simulator steps once at the start of each round)."""
+        return max(self.tick - 1, 0)
+
+    def effective_radius(self, rsu: RSU) -> float:
+        """The RSU's radius at the current round, honoring outage windows."""
+        for o in self.cfg.outages:
+            if o.rsu_id == rsu.rsu_id and o.start <= self.round_idx < o.end:
+                return 0.0
+        return rsu.radius
+
     def distances_to(self, rsu: RSU) -> np.ndarray:
         return np.linalg.norm(self.pos - np.asarray(rsu.xy), axis=1)
 
     def in_coverage(self, rsu: RSU) -> np.ndarray:
-        return self.distances_to(rsu) <= rsu.radius
+        return self.distances_to(rsu) <= self.effective_radius(rsu)
 
     def predict_departure(self, rsu: RSU, horizon_s: float) -> np.ndarray:
         """True for vehicles predicted to exit coverage within `horizon_s`
         (linear velocity extrapolation — §IV-E's anticipation signal)."""
         future = self.pos + self.vel * horizon_s
         d_future = np.linalg.norm(future - np.asarray(rsu.xy), axis=1)
-        return (d_future > rsu.radius) & self.in_coverage(rsu)
+        return (d_future > self.effective_radius(rsu)) & self.in_coverage(rsu)
 
     def round_view(self, rsu: RSU, horizon_s: Optional[float] = None) -> dict:
         """Everything one task round needs from mobility, in one snapshot:
@@ -116,11 +214,15 @@ class MobilityModel:
 
         Shared by the serial planner and the fused engine's round staging so
         both consume identical geometry (the fused engine ships these arrays
-        straight into its jit program).
+        straight into its jit program). ``active`` is presence-gated: a
+        vehicle outside its arrival/departure slot can never participate,
+        regardless of geometry — the dynamic-fleet invariant every engine
+        inherits from this one mask.
         """
         h = self.cfg.dt if horizon_s is None else horizon_s
-        active = self.in_coverage(rsu)
-        departing = (self.predict_departure(rsu, h) if active.any()
+        active = self.in_coverage(rsu) & self.present
+        departing = ((self.predict_departure(rsu, h) & active)
+                     if active.any()
                      else np.zeros(self.cfg.num_vehicles, bool))
         staying = active & ~departing
         return {

@@ -13,6 +13,11 @@ Training dynamics use a reduced backbone (container is 1-core CPU);
 cost accounting uses the FULL paper backbone's dimensions (ViT-Base by
 default) so latency/energy magnitudes stay paper-faithful. Both archs are
 configurable (DESIGN.md §4, EXPERIMENTS.md records settings).
+
+Mobility regimes beyond the default synthetic map — trace replay, dynamic
+fleets (arrival/departure slots), RSU layouts and outage windows — are
+declared on ``SimConfig.mobility_sim`` and packaged as named presets in
+``repro.sim.scenarios`` (README "Scenarios").
 """
 from __future__ import annotations
 
@@ -77,6 +82,9 @@ class SimConfig:
     # resolved auto choice falls back from fused to batched for methods the
     # fused engine does not cover (an EXPLICIT engine="fused" raises).
     engine: Optional[str] = None
+    # bookkeeping label set by repro.sim.scenarios.build_config; the actual
+    # scenario recipe (trace, RSU layout, outages) lives in mobility_sim
+    scenario: Optional[str] = None
 
 
 class IoVSimulator:
@@ -87,10 +95,14 @@ class IoVSimulator:
         self.rng = rng
 
         # --- model (shared frozen base across tasks; adapters per task) ---
+        # the default train arch resolves onto the SIMULATOR, never back
+        # into the caller's SimConfig (same no-mutation contract as engine:
+        # a SimConfig reused across simulators must stay as authored)
         if cfg.train_arch is None:
             from repro.configs import vit_base_paper
-            cfg.train_arch = vit_base_paper.reduced()
-        self.model_cfg = cfg.train_arch
+            self.model_cfg = vit_base_paper.reduced()
+        else:
+            self.model_cfg = cfg.train_arch
         key = jax.random.PRNGKey(cfg.seed)
         self.params = T.init_params(key, self.model_cfg, dtype=jnp.float32)
         # resolved choice lives on the simulator — never written back into
@@ -156,7 +168,8 @@ class IoVSimulator:
                                  seed=cfg.seed)
         self.rsus = MobilityModel.place_rsus(cfg.num_tasks, ms.area,
                                              ms.coverage_radius,
-                                             seed=cfg.seed)
+                                             seed=cfg.seed,
+                                             layout=ms.rsu_layout)
         self.mobility = MobilityModel(ms, self.rsus)
         self.channel = ChannelModel(cfg.channel, seed=cfg.seed + 3)
         self.servers = [RSUServer(self.model_cfg, cfg.lora,
@@ -604,10 +617,16 @@ class IoVSimulator:
     # ------------------------------------------------------------------
     def summary(self, tail: int = 10) -> Dict[str, float]:
         h = self.history
+        if not h:   # before any round: empty-history-safe, not ValueError
+            return {"method": self.cfg.method, "rounds": 0,
+                    "cum_reward": 0.0, "best_accuracy": 0.0,
+                    "avg_latency": 0.0, "avg_energy": 0.0,
+                    "avg_comm_params": 0.0}
         tail_h = h[-tail:]
         best_acc = max(r["accuracy"] for r in h)
         return {
             "method": self.cfg.method,
+            "rounds": len(h),
             "cum_reward": float(sum(r["reward"] for r in h)),
             "best_accuracy": float(best_acc),
             "avg_latency": float(np.mean([r["latency"] for r in tail_h])),

@@ -1,0 +1,146 @@
+"""Regression tests for simulator contract & geometry bugs (PR 3).
+
+1. ``IoVSimulator.__init__`` used to write the resolved default
+   ``train_arch`` back into the caller's SimConfig, violating the
+   documented no-mutation contract it upholds for ``engine``.
+2. ``MobilityModel.place_rsus`` Gaussian jitter could place RSUs outside
+   ``[0, area]`` (edge coverage silently shrank), and ``step()``'s
+   single-bounce reflection left positions out of bounds when a fast
+   vehicle overshot by more than the area width.
+3. ``IoVSimulator.summary()`` raised ``ValueError`` (max of empty
+   sequence) when called before any round had run.
+"""
+import numpy as np
+import pytest
+
+from repro.sim.mobility_model import MobilityModel, MobilitySimConfig
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+
+def _tiny_cfg():
+    from repro.configs import vit_base_paper
+    return vit_base_paper.vit_base_paper().with_overrides(
+        name="vit-test-bugfix", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+
+
+# ---------------------------------------------------------------------------
+# 1. SimConfig no-mutation contract
+# ---------------------------------------------------------------------------
+
+def test_simconfig_train_arch_not_mutated_across_sims():
+    """One SimConfig reused across two simulators: the resolved default
+    train_arch must live on the simulator, never be written back into the
+    caller's config (same contract as engine resolution)."""
+    cfg = SimConfig(method="ours", rounds=1, num_vehicles=2, num_tasks=1,
+                    local_steps=1, seed=0)
+    assert cfg.train_arch is None
+    sim_a = IoVSimulator(cfg)
+    assert cfg.train_arch is None, "first construction mutated the config"
+    sim_b = IoVSimulator(cfg)
+    assert cfg.train_arch is None
+    assert cfg.engine is None
+    # both simulators resolved the same default independently
+    assert sim_a.model_cfg == sim_b.model_cfg
+    assert sim_a.model_cfg.name == "vit-tiny-paper"
+
+
+def test_simconfig_explicit_train_arch_untouched():
+    arch = _tiny_cfg()
+    cfg = SimConfig(method="ours", rounds=1, num_vehicles=2, num_tasks=1,
+                    local_steps=1, train_arch=arch)
+    sim = IoVSimulator(cfg)
+    assert cfg.train_arch is arch
+    assert sim.model_cfg is arch
+
+
+# ---------------------------------------------------------------------------
+# 2. Geometry: RSU placement and boundary reflection stay in bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["grid", "corridor", "sparse"])
+def test_place_rsus_centers_in_bounds(layout):
+    """Jittered placement is clipped into [0, area] for every layout; edge
+    RSUs keep their full in-map coverage footprint."""
+    area = 1000.0
+    for seed in range(25):
+        for tasks in (1, 2, 5, 9, 16, 25):
+            rsus = MobilityModel.place_rsus(tasks, area, radius=300.0,
+                                            seed=seed, layout=layout)
+            assert len(rsus) == tasks
+            for r in rsus:
+                assert 0.0 <= r.xy[0] <= area, (layout, seed, tasks, r)
+                assert 0.0 <= r.xy[1] <= area, (layout, seed, tasks, r)
+
+
+def test_place_rsus_rejects_unknown_layout():
+    with pytest.raises(ValueError, match="rsu_layout"):
+        MobilityModel.place_rsus(2, 1000.0, 300.0, layout="ring")
+
+
+def test_step_reflection_in_bounds_under_extreme_overshoot():
+    """Property over long rollouts: a vehicle overshooting the boundary by
+    many area-widths per tick must still reflect back into [0, area] (the
+    old single-bounce update left it outside whenever overshoot > area)."""
+    cfg = MobilitySimConfig(area=300.0, num_vehicles=16, mean_speed=800.0,
+                            speed_std=400.0, dt=10.0, seed=7)
+    rsus = MobilityModel.place_rsus(2, cfg.area, 150.0, seed=7)
+    m = MobilityModel(cfg, rsus)
+    for _ in range(200):
+        m.step()
+        assert np.all(m.pos >= 0.0) and np.all(m.pos <= cfg.area), m.pos
+        assert np.all(np.isfinite(m.vel))
+
+
+def test_step_reflection_matches_single_bounce_case():
+    """In the normal regime (overshoot < area) the triangle-wave fold is
+    the same arithmetic as the old single-bounce update, so RNG-pinned
+    histories are unchanged."""
+    cfg = MobilitySimConfig(area=3000.0, num_vehicles=8, seed=3)
+    rsus = MobilityModel.place_rsus(2, cfg.area, 1100.0, seed=3)
+    m = MobilityModel(cfg, rsus)
+    ref_pos = m.pos.copy()
+    ref_vel = m.vel.copy()
+    rng = np.random.default_rng(3)
+    rng.uniform(0, cfg.area, size=(8, 2))       # consume init draws
+    rng.uniform(0, 2 * np.pi, 8)
+    np.abs(rng.normal(cfg.mean_speed, cfg.speed_std, 8))
+    for _ in range(50):
+        noise = rng.normal(0, cfg.speed_std, ref_vel.shape)
+        centers = np.array([r.xy for r in rsus])
+        d = np.linalg.norm(ref_pos[:, None, :] - centers[None], axis=-1)
+        nearest = centers[np.argmin(d, axis=1)]
+        dirn = nearest - ref_pos
+        norm = np.maximum(np.linalg.norm(dirn, axis=1, keepdims=True), 1.0)
+        drift = cfg.hotspot_pull * cfg.mean_speed * dirn / norm
+        ref_vel = (cfg.gm_alpha * ref_vel + (1 - cfg.gm_alpha) * drift
+                   + np.sqrt(1 - cfg.gm_alpha ** 2) * noise)
+        ref_pos = ref_pos + ref_vel * cfg.dt
+        for ax in range(2):   # the seed's original single-bounce update
+            low = ref_pos[:, ax] < 0
+            high = ref_pos[:, ax] > cfg.area
+            ref_pos[low, ax] *= -1
+            ref_pos[high, ax] = 2 * cfg.area - ref_pos[high, ax]
+            ref_vel[low | high, ax] *= -1
+        m.step()
+        np.testing.assert_allclose(m.pos, ref_pos, rtol=1e-12)
+        np.testing.assert_allclose(m.vel, ref_vel, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 3. summary() before any round
+# ---------------------------------------------------------------------------
+
+def test_summary_before_any_round_is_safe():
+    sim = IoVSimulator(SimConfig(
+        method="ours", rounds=1, num_vehicles=2, num_tasks=1,
+        local_steps=1, train_arch=_tiny_cfg()))
+    s = sim.summary()   # used to raise ValueError: max() of empty sequence
+    assert s["rounds"] == 0
+    assert s["method"] == "ours"
+    assert s["cum_reward"] == 0.0
+    assert s["best_accuracy"] == 0.0
+    h = sim.run(1)
+    s = sim.summary()
+    assert s["rounds"] == len(h) == 1
+    assert np.isfinite(s["best_accuracy"])
