@@ -10,7 +10,9 @@ mobility fallbacks). Per cell we record the summary metrics plus fleet
 dynamics (mean/peak participation, churn), so the committed
 ``BENCH_scenario_suite.json`` documents how the accuracy/energy/latency
 trade-off shifts between dense urban coverage, highway handoffs, rush-hour
-fleet waves, sparse rural dead zones and RSU outages.
+fleet waves, sparse rural dead zones, RSU outages and the two-tier
+multi-RSU hierarchies (dense-rsu, handoff-storm — per-RSU partial
+aggregation, staleness-weighted syncs, adapter-migration handoffs).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.scenario_suite            # full sweep
@@ -53,11 +55,18 @@ def run_cell(scenario: str, method: str, rounds: int, seed: int
     ranks = [t["mean_rank"] for r in hist for t in r["tasks"]
              if t["active"] > 0]
     churn = (float(np.abs(np.diff(act)).mean()) if len(act) > 1 else 0.0)
+    handoffs = sum(t.get("handoffs", 0) for r in hist for t in r["tasks"])
+    tier = sim.cfg.rsu_tier
     return {
         "scenario": scenario,
         "method": method,
         "rounds": rounds,
         "seed": seed,
+        # two-tier hierarchy axes (trivial tiers report 1/1/0)
+        "num_rsus_per_task": tier.num_rsus_per_task,
+        "sync_period": tier.sync_period,
+        "total_handoffs": int(handoffs),
+        "handoffs_per_round": round(handoffs / max(rounds, 1), 3),
         # accuracy-efficiency trade-off axes
         "best_accuracy": s["best_accuracy"],
         "cum_reward": s["cum_reward"],
@@ -101,12 +110,14 @@ def main(smoke: bool = False, rounds: Optional[int] = None,
                   f" E={cell['avg_energy']:7.1f}J lat={cell['avg_latency']:5.1f}s"
                   f" act={cell['mean_active']:.1f}"
                   f" churn={cell['participation_churn']:.2f}"
+                  f" ho={cell['total_handoffs']}"
                   f" ({cell['run_s']:.0f}s)")
 
     emit_csv("scenario_suite (fused scanned engine)", rows,
              ["best_accuracy", "avg_energy", "avg_latency",
               "avg_comm_params", "mean_rank", "mean_active",
-              "participation_churn", "empty_rounds", "round_s"])
+              "participation_churn", "empty_rounds", "total_handoffs",
+              "round_s"])
     out = {
         "results": rows,
         "config": {"methods": list(methods), "scenarios": names,

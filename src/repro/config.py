@@ -283,6 +283,54 @@ class TraceSpec:
 
 
 @dataclass(frozen=True)
+class RSUTierSpec:
+    """Two-tier RSU hierarchy for the IoV simulator (paper's hierarchical
+    aggregation: many RSUs per task, periodic global sync).
+
+    Each task deploys ``num_rsus_per_task`` RSUs (placed by
+    ``MobilityModel.place_rsus`` within the task's layout cell, one
+    placement subkey per RSU). Every round each vehicle is associated to
+    its nearest *in-range* RSU of the task; a change of association between
+    two valid RSUs is a HANDOFF and charges the adapter-migration penalty
+    below. Uploads are aggregated per RSU into partial models (segment-sum
+    over the fused engine's rank-padded fleet arrays); every
+    ``sync_period`` rounds the partials are merged into the global adapter
+    with staleness-discounted weights ``w_k · staleness_decay**age_k``
+    (``age_k`` = rounds since RSU k last received uploads).
+
+    The trivial tier (``num_rsus_per_task=1, sync_period=1``) is
+    regression-pinned to reproduce the pre-hierarchy simulator bit-exactly
+    on both the serial and fused engines (tests/test_rsu_tier.py).
+    """
+    num_rsus_per_task: int = 1
+    sync_period: int = 1
+    # per-round discount of a partial's sync weight while it goes without
+    # fresh uploads; 1.0 disables the discount
+    staleness_decay: float = 0.6
+    # §III-C-style adapter-migration penalty charged to a vehicle whose
+    # association changed this round (old RSU forwards its adapter state)
+    handoff_energy: float = 0.0    # J
+    handoff_latency: float = 0.0   # s
+
+    @property
+    def trivial(self) -> bool:
+        """One RSU per task, synced every round — the pre-hierarchy
+        semantics (and the bit-exact regression contract)."""
+        return self.num_rsus_per_task == 1 and self.sync_period == 1
+
+    def __post_init__(self):
+        if self.num_rsus_per_task < 1:
+            raise ValueError("num_rsus_per_task must be >= 1")
+        if self.sync_period < 1:
+            raise ValueError("sync_period must be >= 1")
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError("staleness_decay must be in (0, 1]")
+        if self.handoff_energy < 0.0 or self.handoff_latency < 0.0:
+            raise ValueError("handoff penalties must be >= 0 (a negative "
+                             "penalty would subsidize re-associations)")
+
+
+@dataclass(frozen=True)
 class OutageSpec:
     """RSU coverage outage: RSU ``rsu_id`` has zero effective radius for
     round indices ``start <= round < end`` (0-based). Vehicles lose coverage

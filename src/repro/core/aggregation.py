@@ -372,6 +372,137 @@ def factors_full(svd_tree: Any, scale: float) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Two-tier RSU hierarchy: per-RSU segment-sum partials + staleness-weighted
+# periodic sync into the global adapter. The fused engine keeps the partials
+# as stacked trees with a leading (K,) segment axis inside its scan carry;
+# the host-side server keeps lists of per-RSU trees — both merge through
+# the same weighted reduction below.
+# ---------------------------------------------------------------------------
+
+def staleness_weights(ages, decay: float):
+    """Per-partial staleness discount ``decay**age``.
+
+    ``ages`` counts rounds since an RSU partial last received uploads; with
+    sync_period=1 every contributing partial is refreshed in the sync round
+    itself, so every discount is EXACTLY 1.0 (``decay**0 == 1.0`` in IEEE
+    arithmetic — the trivial-tier equivalence contract). For
+    ``0 < decay < 1`` the discount is strictly monotone decreasing in age.
+    Works elementwise for numpy and jnp inputs.
+    """
+    ages = jnp.asarray(ages, jnp.float32)
+    return jnp.power(jnp.asarray(decay, jnp.float32), ages)
+
+
+def sync_weights(data_w, ages, decay: float):
+    """Normalized sync weights ω̂_k for merging RSU partials.
+
+    ω_k = data_w_k · decay**age_k (data-size weight of the partial's last
+    refresh, staleness-discounted); ω̂ = ω / Σω. Segments that never
+    received uploads carry data_w 0 and are exact no-ops. Returns (K,)
+    normalized weights summing to 1 whenever any ω_k > 0.
+    """
+    w = jnp.asarray(data_w, jnp.float32) * staleness_weights(ages, decay)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def merge_partials(partials_stacked: Any, data_w, ages, decay: float) -> Any:
+    """Staleness-discounted merge of per-RSU partials into the global tree.
+
+    partials_stacked: any pytree whose leaves carry a leading (K,) segment
+    axis — merged-delta trees ("ours") and factor trees (HetLoRA) alike.
+    Returns the ω̂-weighted sum over the segment axis. With K=1 the single
+    normalized weight is exactly 1.0 (x/x), so the merge is bit-exact
+    identity on the lone partial.
+    """
+    wn = sync_weights(data_w, ages, decay)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.sum(x.astype(jnp.float32)
+                          * _wvec(wn, x.ndim), axis=0),
+        partials_stacked)
+
+
+def segment_weight_matrix(assoc, weights, num_segments: int
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(V, K) per-segment LOCALLY-normalized weights + (K,) raw sums.
+
+    assoc: (V,) int segment index per vehicle, -1 for unassociated lanes
+    (their one-hot row is all-zero, so they are exact no-ops in every
+    segment). weights: (V,) data-size weights (0 for non-contributing
+    vehicles). Column k of the result sums to 1 whenever segment k has any
+    weight.
+    """
+    assoc = jnp.asarray(assoc, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    onehot = jax.nn.one_hot(assoc, num_segments, dtype=jnp.float32)
+    w_vk = w[:, None] * onehot                       # (V, K)
+    seg_w = jnp.sum(w_vk, axis=0)                    # (K,)
+    return w_vk / jnp.maximum(seg_w, 1e-12)[None, :], seg_w
+
+
+def aggregate_merged_padded_segmented(stacked: Any, weights, assoc,
+                                      num_segments: int, scale: float
+                                      ) -> Tuple[Any, jnp.ndarray]:
+    """Per-RSU merged-delta partials via segment-sum over the rank-padded
+    fleet tree (the fused engine's hierarchy step — one einsum per target,
+    still inside the single jit program).
+
+    Returns ``(partials, seg_w)``: partials is a delta tree whose leaves
+    carry a leading (K,) segment axis — slot k equals
+    :func:`aggregate_merged` over the vehicles associated to segment k —
+    and seg_w is the (K,) raw weight sum per segment (0 ⇒ the slot is a
+    zero tree and the caller keeps its previous partial).
+    """
+    wn_vk, seg_w = segment_weight_matrix(assoc, weights, num_segments)
+    paths = tree_paths(_skeleton(stacked))
+    out = _skeleton(stacked)
+    for path in paths:
+        ad = tree_get(stacked, path)
+        delta = scale * jnp.einsum(
+            "vk,v...ir,v...ro->k...io", wn_vk,
+            ad["a"].astype(jnp.float32), ad["b"].astype(jnp.float32))
+        out = tree_set(out, path, {"delta": delta})
+    return out, seg_w
+
+
+def aggregate_hetlora_segmented(stacked: Any, weights, assoc,
+                                num_segments: int, max_rank: int
+                                ) -> Tuple[Any, jnp.ndarray]:
+    """Per-RSU HetLoRA partials: zero-pad to max_rank, factor-wise
+    segment-sum. stacked: fleet tree with a leading (V,) axis whose
+    adapters share one rank r ≤ max_rank (a rank group, or the rank-padded
+    fleet). Returns a factor tree with a leading (K,) axis + (K,) raw
+    segment weights; slot k equals :func:`aggregate_hetlora` over segment
+    k's vehicles.
+    """
+    wn_vk, seg_w = segment_weight_matrix(assoc, weights, num_segments)
+    paths = tree_paths(_skeleton(stacked))
+    out = _skeleton(stacked)
+    for path in paths:
+        ad = tree_get(stacked, path)
+        r = ad["a"].shape[-1]
+        pad_a = [(0, 0)] * (ad["a"].ndim - 1) + [(0, max_rank - r)]
+        pad_b = ([(0, 0)] * (ad["b"].ndim - 2)
+                 + [(0, max_rank - r)] + [(0, 0)])
+        a = jnp.pad(ad["a"].astype(jnp.float32), pad_a)
+        b = jnp.pad(ad["b"].astype(jnp.float32), pad_b)
+        seg_a = jnp.einsum("vk,v...->k...", wn_vk, a)
+        seg_b = jnp.einsum("vk,v...->k...", wn_vk, b)
+        out = tree_set(out, path, {"a": seg_a, "b": seg_b})
+    return out, seg_w
+
+
+def stack_partials(partials: Sequence[Any]) -> Any:
+    """List of K per-RSU trees → one tree with a leading (K,) axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *partials)
+
+
+def unstack_partials(stacked: Any, num_segments: int) -> List[Any]:
+    """Inverse of :func:`stack_partials` (host-side mirroring)."""
+    return [jax.tree_util.tree_map(lambda x: x[k], stacked)
+            for k in range(num_segments)]
+
+
+# ---------------------------------------------------------------------------
 # HetLoRA (Cho et al., 2024): zero-padding aggregation + self-pruning
 # ---------------------------------------------------------------------------
 

@@ -149,6 +149,22 @@ def vehicle_round_costs_vec(*, freq, comp_power, tx_power, flops_per_sample,
             "energy": e_down + e_comp + e_up}
 
 
+def handoff_costs(handoff_latency: float, handoff_energy: float, handoffs):
+    """Adapter-migration penalty for RSU handoffs (two-tier hierarchy).
+
+    When a vehicle's nearest-in-range association changes between two valid
+    RSUs, the old RSU forwards the vehicle's adapter/optimizer context to
+    the new one — an extra control-plane exchange charged like the §IV-E
+    migration fallback. ``handoffs`` is a (V,) bool mask (numpy or jnp);
+    returns ``(extra_latency, extra_energy)`` per vehicle, zeros where no
+    handoff fired. With zero penalties (the default RSUTierSpec) this is an
+    exact no-op, which the trivial-tier regression pin relies on.
+    """
+    lat = handoffs * handoff_latency
+    e = handoffs * handoff_energy
+    return lat, e
+
+
 def rsu_agg_costs(rsu: RSUProfile, num_vehicles: int) -> Tuple[float, float]:
     tau = rsu.agg_flops_per_vehicle * num_vehicles / rsu.freq
     e = rsu.kappa * rsu.freq ** 3 * tau

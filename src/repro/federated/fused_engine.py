@@ -33,6 +33,20 @@ Exactness contract (regression-tested against the serial engine):
   staging and reuses zeros instead (the per-round ``run_round`` path stages
   on demand and stays exact even then).
 
+Two-tier RSU hierarchy (ISSUE 4): with a non-trivial
+``SimConfig.rsu_tier`` the round program additionally (a) charges the
+adapter-migration penalty to vehicles whose staged RSU association changed
+(handoffs), (b) reduces uploads into per-RSU PARTIALS with one
+association-one-hot segment-sum over the same rank-padded fleet tree, and
+(c) merges the partials into the global adapter every ``sync_period``
+rounds with staleness-discounted weights — all still one jit program with
+one cache key (the tier is static). The trivial tier takes a statically
+branched path whose program is the pre-hierarchy one, byte for byte; under
+``run_scanned`` a non-trivial tier pre-stages fresh adapter draws for
+EVERY round of a task that has no global model yet (the serial server
+redraws per round until the first sync), so scanned and per-round
+execution replay each other under hierarchies too.
+
 Dynamic fleets (scenario subsystem, PR 3): arrival/departure slots are a
 presence mask maintained by ``MobilityModel`` (trace replay) and folded
 into the ``active`` mask that ``round_view`` hands to the staging below. An
@@ -96,6 +110,13 @@ class FusedRoundEngine:
         self.lora = cfg.lora
         self.V = cfg.num_vehicles
         self.T = cfg.num_tasks
+        # two-tier RSU hierarchy: per-RSU partial aggregation + periodic
+        # staleness-weighted sync. The trivial tier keeps the pre-hierarchy
+        # round program byte-for-byte (static branch at trace time).
+        self.tier = cfg.rsu_tier
+        self.K = self.tier.num_rsus_per_task
+        self.P = self.tier.sync_period
+        self.tier_trivial = self.tier.trivial
         self.Rmax = cfg.lora.max_rank
         self.steps = cfg.local_steps
         self.opt = adam(cfg.lr)
@@ -166,6 +187,10 @@ class FusedRoundEngine:
         self._zero_merged = self._merged_zeros_like(tmpl)
         self._zero_fleet = jax.tree_util.tree_map(
             lambda x: jnp.zeros((self.V,) + x.shape, x.dtype), tmpl)
+        # per-task RSU partials: merged-delta tree with a leading (K,) axis
+        self._zero_partials = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((self.K,) + x.shape, x.dtype),
+            self._zero_merged)
 
         self._carry = None
         self._has_merged_host = [False] * self.T
@@ -205,6 +230,21 @@ class FusedRoundEngine:
             if self._has_merged_host[t]:
                 self._carry["merged"][t] = sim.servers[t].merged
         self._carry["has_merged"] = jnp.asarray(self._has_merged_host)
+        if not self.tier_trivial:
+            parts, pw, page = [], [], []
+            for t in range(self.T):
+                srv = sim.servers[t]
+                if srv.partials is not None:
+                    parts.append(agg.stack_partials(
+                        [p if p is not None else self._zero_merged
+                         for p in srv.partials]))
+                else:
+                    parts.append(self._zero_partials)
+                pw.append(np.asarray(srv.partial_w, np.float32))
+                page.append(np.asarray(srv.partial_age, np.float32))
+            self._carry["partials"] = parts
+            self._carry["partial_w"] = jnp.asarray(np.stack(pw))
+            self._carry["partial_age"] = jnp.asarray(np.stack(page))
 
     # ------------------------------------------------------------------
     # Host staging: consume the serial engine's RNG streams, same order
@@ -224,6 +264,8 @@ class FusedRoundEngine:
         sim.mobility.step()
         active = np.zeros((self.T, self.V), bool)
         departing = np.zeros((self.T, self.V), bool)
+        handoff = np.zeros((self.T, self.V), bool)
+        assoc = np.full((self.T, self.V), -1, np.int32)
         peer = np.zeros((self.T,), bool)
         rate_d = np.zeros((self.T, self.V), np.float64)
         rate_u = np.zeros((self.T, self.V), np.float64)
@@ -233,9 +275,11 @@ class FusedRoundEngine:
         fresh: List[Any] = []
         dev_tx = np.asarray([p.tx_power for p in sim.dev_profiles])
         for t in range(self.T):
-            view = sim.mobility.round_view(sim.rsus[t])
+            view = sim.mobility.round_view_group(sim.rsu_groups[t])
             act, dep = view["active"], view["departing"]
             active[t], departing[t] = act, dep
+            handoff[t] = view["handoff"]
+            assoc[t] = view["assoc"]
             peer[t] = view["peer_available"]
             ids = np.where(act)[0]
             rate_d[t], rate_u[t] = sim.channel.round_rates(
@@ -268,6 +312,7 @@ class FusedRoundEngine:
             else:
                 fresh.append(self._zero_fleet)
         x = {"active": active, "departing": departing, "peer": peer,
+             "assoc": assoc, "handoff": handoff,
              "rate_down": rate_d.astype(np.float32),
              "rate_up": rate_u.astype(np.float32),
              "counts": counts, "tokens": tokens, "labels": labels}
@@ -332,9 +377,11 @@ class FusedRoundEngine:
 
         new_ucb, new_merged = [], []
         has_m_out = []
+        new_partials, new_pw, new_page = [], [], []
         rec: Dict[str, List[Any]] = {k: [] for k in (
             "accuracy", "latency", "energy", "reward", "lambda", "mean_rank",
-            "active", "departing", "fallbacks", "comm_params", "n_kept")}
+            "active", "departing", "handoffs", "fallbacks", "comm_params",
+            "n_kept", "has_m")}
         check: Dict[str, List[Any]] = {"dist": [], "new": [], "ranks": []}
 
         for ti in range(self.T):
@@ -406,6 +453,16 @@ class FusedRoundEngine:
                 extra_e = extra_tau = jnp.zeros((self.V,), jnp.float32)
                 fb = jnp.zeros((3,), jnp.int32)
 
+            hoff = act & x["handoff"][ti]
+            if not self.tier_trivial:
+                # adapter-migration penalty for re-associated vehicles
+                # (static gate: the trivial program stays byte-identical)
+                ho_tau, ho_e = cm.handoff_costs(
+                    self.tier.handoff_latency, self.tier.handoff_energy,
+                    hoff.astype(jnp.float32))
+                extra_e = extra_e + ho_e
+                extra_tau = extra_tau + ho_tau
+
             e_v = costs["energy"] + extra_e
             tau_v = costs["latency"] + extra_tau
             per_v_energy = jnp.where(act, e_v, 0.0)
@@ -415,14 +472,53 @@ class FusedRoundEngine:
             n_kept = jnp.sum(contribute)
 
             # 6. rank-padded fleet aggregation (zero-weight lanes are
-            #    exact no-ops); empty rounds leave the merged delta alone
+            #    exact no-ops); empty rounds leave the merged delta alone.
+            #    Trivial tier: one global reduction, synced every round.
+            #    Non-trivial tier: segment-sum per-RSU partials, then a
+            #    staleness-weighted merge into the global adapter every
+            #    sync_period rounds — all inside this same jit program.
             w = jnp.where(contribute, self.weights[ti], 0.0)
-            merged_new = agg.aggregate_merged_padded(new_ads, w, self.S0)
             keep = n_kept > 0
-            merged_out = jax.tree_util.tree_map(
-                lambda n, o: jnp.where(keep, n, o), merged_new,
-                carry["merged"][ti])
-            has_m = carry["has_merged"][ti] | keep
+            if self.tier_trivial:
+                merged_new = agg.aggregate_merged_padded(new_ads, w, self.S0)
+                merged_out = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(keep, n, o), merged_new,
+                    carry["merged"][ti])
+                has_m = carry["has_merged"][ti] | keep
+            else:
+                # uploads carry the RSU association of the vehicle that
+                # produced them (assoc == -1 lanes have weight 0 already)
+                part_new, seg_w = agg.aggregate_merged_padded_segmented(
+                    new_ads, w, jnp.where(contribute, x["assoc"][ti], -1),
+                    self.K, self.S0)
+                refreshed = seg_w > 0                       # (K,)
+
+                def upd(n, o):
+                    r = refreshed.reshape((self.K,) + (1,) * (n.ndim - 1))
+                    return jnp.where(r, n, o)
+
+                parts_out = jax.tree_util.tree_map(
+                    upd, part_new, carry["partials"][ti])
+                pw_old = carry["partial_w"][ti]
+                page_old = carry["partial_age"][ti]
+                pw = jnp.where(refreshed, seg_w, pw_old)
+                page = jnp.where(refreshed, 0.0,
+                                 jnp.where(pw_old > 0, page_old + 1.0,
+                                           page_old))
+                is_sync = ((round_idx + 1) % self.P) == 0
+                omega = pw * agg.staleness_weights(page,
+                                                   self.tier.staleness_decay)
+                candidate = agg.merge_partials(
+                    parts_out, pw, page, self.tier.staleness_decay)
+                do_merge = is_sync & (jnp.sum(omega) > 0)
+                merged_out = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(do_merge, n, o), candidate,
+                    carry["merged"][ti])
+                has_m = carry["has_merged"][ti] | do_merge
+                # a synced window resets: only new uploads count next time
+                new_partials.append(parts_out)
+                new_pw.append(jnp.where(is_sync, 0.0, pw))
+                new_page.append(jnp.where(is_sync, 0.0, page))
 
             # 7. global eval on the task's held-out set (seed-0 SVD at
             #    max_rank — the serial engine's eval_adapters view)
@@ -434,7 +530,12 @@ class FusedRoundEngine:
                                    scale=self.alpha / self.Rmax)
                 return met["accuracy"]
 
-            acc = jax.lax.cond(keep, do_eval,
+            # serial evals only when this round kept uploads AND a global
+            # model exists — for non-trivial tiers the global only appears
+            # at a sync round, so gate on has_m as well (trivial tier:
+            # keep already implies has_m)
+            eval_gate = keep if self.tier_trivial else (keep & has_m)
+            acc = jax.lax.cond(eval_gate, do_eval,
                                lambda m: jnp.zeros((), jnp.float32),
                                merged_out)
 
@@ -474,9 +575,11 @@ class FusedRoundEngine:
             rec["mean_rank"].append(mean_rank)
             rec["active"].append(n_active.astype(jnp.int32))
             rec["departing"].append(jnp.sum(dep).astype(jnp.int32))
+            rec["handoffs"].append(jnp.sum(hoff).astype(jnp.int32))
             rec["fallbacks"].append(fb)
             rec["comm_params"].append(comm)
             rec["n_kept"].append(n_kept.astype(jnp.int32))
+            rec["has_m"].append(has_m)
             if self.check:
                 check["dist"].append(dist)
                 check["new"].append(new_ads)
@@ -495,6 +598,10 @@ class FusedRoundEngine:
         out_carry = {"ucb": new_ucb, "merged": new_merged,
                      "has_merged": jnp.stack(has_m_out),
                      "alloc": alloc, "round": round_idx + 1}
+        if not self.tier_trivial:
+            out_carry["partials"] = new_partials
+            out_carry["partial_w"] = jnp.stack(new_pw)
+            out_carry["partial_age"] = jnp.stack(new_page)
         out_rec = {k: jnp.stack(v) for k, v in rec.items()}
         out_rec["budgets"] = budgets
         if self.check:
@@ -534,23 +641,39 @@ class FusedRoundEngine:
                              " use run()/run_round(), not run_scanned()")
         if self._carry is None:
             self._init_carry()
-        xs_list, fresh_const = [], None
+        xs_list: List[Dict[str, Any]] = []
+        fresh_list: List[List[Any]] = []
+        # trivial tier only: ONE staged draw per task (its first covered
+        # round), shipped as a scan constant selected by round index. The
+        # hierarchy path instead ships per-round draws via xs (pre-sync
+        # rounds each redraw, like the serial server) and never reads
+        # these three.
+        fresh_const = None
         fresh_round = np.full((self.T,), -1, np.int64)
         staged = [False] * self.T
         for r in range(rounds):
-            allow = [not self._has_merged_host[t] and not staged[t]
-                     for t in range(self.T)]
+            if self.tier_trivial:
+                allow = [not self._has_merged_host[t] and not staged[t]
+                         for t in range(self.T)]
+            else:
+                # stage fresh for EVERY round of a task that has no global
+                # model yet; post-sync the program ignores them
+                allow = [not self._has_merged_host[t]
+                         for t in range(self.T)]
             x, fresh = self._stage_round(allow)
-            for t in range(self.T):
-                if allow[t] and x["active"][t].any():
-                    staged[t] = True
-                    fresh_round[t] = int(np.asarray(self._carry["round"])) + r
-                    if fresh_const is None:
-                        fresh_const = [self._zero_fleet] * self.T
-                    fresh_const = list(fresh_const)
-                    fresh_const[t] = fresh[t]
+            fresh_list.append(fresh)
+            if self.tier_trivial:
+                for t in range(self.T):
+                    if allow[t] and x["active"][t].any():
+                        staged[t] = True
+                        fresh_round[t] = (int(np.asarray(
+                            self._carry["round"])) + r)
+                        if fresh_const is None:
+                            fresh_const = [self._zero_fleet] * self.T
+                        fresh_const = list(fresh_const)
+                        fresh_const[t] = fresh[t]
             xs_list.append(x)
-        if fresh_const is None:
+        if self.tier_trivial and fresh_const is None:
             fresh_const = [self._zero_fleet] * self.T
         xs = {
             "active": np.stack([x["active"] for x in xs_list]),
@@ -559,14 +682,31 @@ class FusedRoundEngine:
             "rate_down": np.stack([x["rate_down"] for x in xs_list]),
             "rate_up": np.stack([x["rate_up"] for x in xs_list]),
             "counts": np.stack([x["counts"] for x in xs_list]),
+            "assoc": np.stack([x["assoc"] for x in xs_list]),
+            "handoff": np.stack([x["handoff"] for x in xs_list]),
             "tokens": [np.stack([x["tokens"][t] for x in xs_list])
                        for t in range(self.T)],
             "labels": [np.stack([x["labels"][t] for x in xs_list])
                        for t in range(self.T)],
         }
-        data = {"params": self.sim.params, "fresh": fresh_const,
-                "fresh_round": jnp.asarray(fresh_round, jnp.int32)}
-        fn = self._scan_fn(rounds)
+        staged_fresh = tuple(not hm for hm in self._has_merged_host)
+        if not self.tier_trivial:
+            # per-round fleet-stacked fresh trees ride along as scan xs —
+            # ONLY for tasks that still lack a global model at scan start
+            # (tasks already past their first sync never read fresh, so
+            # shipping (rounds, V, ...) zero stacks for them would waste
+            # device memory and transfer for nothing)
+            xs["fresh"] = [jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves),
+                *[fresh_list[r][t] for r in range(rounds)])
+                for t in range(self.T) if staged_fresh[t]]
+        if self.tier_trivial:
+            data = {"params": self.sim.params, "fresh": fresh_const,
+                    "fresh_round": jnp.asarray(fresh_round, jnp.int32)}
+        else:
+            # the hierarchy body reads only params — fresh rides in xs
+            data = {"params": self.sim.params}
+        fn = self._scan_fn(rounds, staged_fresh)
         self._carry, recs = fn(self._carry, xs, data)
         host = jax.device_get(recs)
         outs = []
@@ -576,10 +716,27 @@ class FusedRoundEngine:
         self._sync_sim()
         return outs
 
-    def _scan_fn(self, rounds: int):
-        if rounds not in self._jit_scan:
+    def _scan_fn(self, rounds: int, staged_fresh: Tuple[bool, ...]):
+        # staged_fresh is part of the cache key: which tasks carry
+        # per-round fresh stacks in xs is baked into the traced body, and
+        # it can change between run_scanned calls (a task syncs mid-run).
+        # The trivial tier ignores it (fresh rides in `data`), so key on
+        # rounds alone there to keep one scan program per horizon.
+        key = (rounds, None if self.tier_trivial else staged_fresh)
+        if key not in self._jit_scan:
             def body_of(data):
                 def body(carry, x):
+                    if not self.tier_trivial:
+                        # per-round staged fresh trees (pre-sync rounds
+                        # redraw, exactly like the serial server); tasks
+                        # already merged at scan start never read fresh,
+                        # so they get the zero template
+                        staged = iter(x.pop("fresh"))
+                        fresh = [next(staged) if staged_fresh[t]
+                                 else self._zero_fleet
+                                 for t in range(self.T)]
+                        d = {"params": data["params"], "fresh": fresh}
+                        return self._round_step(carry, x, d)
                     usef = ((~carry["has_merged"])
                             & (carry["round"] == data["fresh_round"]))
                     fresh = [jax.tree_util.tree_map(
@@ -593,8 +750,8 @@ class FusedRoundEngine:
             def run(carry, xs, data):
                 return jax.lax.scan(body_of(data), carry, xs)
 
-            self._jit_scan[rounds] = run
-        return self._jit_scan[rounds]
+            self._jit_scan[key] = run
+        return self._jit_scan[key]
 
     # ------------------------------------------------------------------
     def _record(self, h: Dict[str, Any]) -> Dict[str, Any]:
@@ -612,12 +769,16 @@ class FusedRoundEngine:
                 "mean_rank": float(h["mean_rank"][ti]),
                 "active": int(h["active"][ti]),
                 "departing": int(h["departing"][ti]),
+                "handoffs": int(h["handoffs"][ti]),
                 "fallbacks": {i: int(h["fallbacks"][ti][i])
                               for i in range(3)},
                 "comm_params": int(h["comm_params"][ti]),
                 "budget": float(h["budgets"][ti]),
             })
-            if int(h["n_kept"][ti]) > 0:
+            # non-trivial tiers only gain a global model at a sync round,
+            # so mirror the program's has_merged flag (for the trivial
+            # tier it is equivalent to n_kept > 0)
+            if bool(h["has_m"][ti]):
                 self._has_merged_host[ti] = True
         rec = {
             "round": len(sim.history),
@@ -647,6 +808,11 @@ class FusedRoundEngine:
                 sim.servers[t].load_merged(c["merged"][t], r)
             else:
                 sim.servers[t].round = r
+            if not self.tier_trivial:
+                sim.servers[t].load_partials(
+                    agg.unstack_partials(c["partials"][t], self.K),
+                    np.asarray(c["partial_w"][t]),
+                    np.asarray(c["partial_age"][t]))
 
     # ------------------------------------------------------------------
     def _run_check(self, x, check) -> None:

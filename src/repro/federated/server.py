@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LoRAConfig, ModelConfig
+from repro.config import LoRAConfig, ModelConfig, RSUTierSpec
 from repro.core import aggregation as agg
 from repro.core import lora as lora_lib
 from repro.federated.batched_client import stack_trees as agg_stack
@@ -25,23 +25,47 @@ from repro.models import transformer as T
 
 class RSUServer:
     def __init__(self, cfg: ModelConfig, lora: LoRAConfig, method: str,
-                 seed: int = 0, residual: bool = False):
+                 seed: int = 0, residual: bool = False,
+                 tier: Optional[RSUTierSpec] = None):
         """residual: beyond-paper aggregation — accumulate client
         *increments* (B̂Â − B⁰A⁰) onto the retained global Δθ instead of
         replacing it with the weighted product average. The paper's replace
         rule collapses the global adapter to the span of one round's client
         ranks; residual aggregation preserves previously learned directions
-        (EXPERIMENTS.md §Paper records both)."""
+        (EXPERIMENTS.md §Paper records both).
+
+        tier: two-tier RSU hierarchy (:class:`repro.config.RSUTierSpec`).
+        With a non-trivial tier, uploads land in per-RSU PARTIALS (routed
+        by the caller-supplied association) and the global state only
+        refreshes every ``sync_period`` rounds, as the staleness-weighted
+        merge of the partials. The trivial default keeps the pre-hierarchy
+        behavior bit-exactly (the partial machinery is never entered)."""
         assert method in ("ours", "homolora", "hetlora", "fedra")
         self.cfg = cfg
         self.lora = lora
         self.method = method
         self.residual = residual
+        self.tier = tier or RSUTierSpec()
+        if not self.tier.trivial:
+            if method not in ("ours", "hetlora"):
+                raise ValueError(
+                    "multi-RSU tiers support methods ('ours', 'hetlora'); "
+                    f"got {method!r} with {self.tier}")
+            if residual:
+                raise ValueError(
+                    "residual aggregation is incompatible with multi-RSU "
+                    "tiers (increments would double-count across partials)")
         self.key = jax.random.PRNGKey(seed)
         self.round = 0
         # method-specific global state
         self.merged = None            # ours: tree of {"delta"}
         self.global_adapters = None   # baselines: adapter tree
+        # hierarchy state: per-RSU partials (same tree species as the
+        # global state), last-refresh data weights, rounds-since-refresh
+        K = self.tier.num_rsus_per_task
+        self.partials: Optional[List[Any]] = None
+        self.partial_w = np.zeros(K, np.float64)
+        self.partial_age = np.zeros(K, np.int64)
         self.fedra_fraction = 0.6
         self._masks: List[np.ndarray] = []
         self._distributed: List[Any] = []
@@ -128,13 +152,19 @@ class RSUServer:
     def aggregate(self, client_adapters: Sequence[Any],
                   weights: Sequence[float],
                   masks: Optional[Sequence] = None,
-                  indices: Optional[Sequence[int]] = None) -> None:
+                  indices: Optional[Sequence[int]] = None,
+                  assoc: Optional[Sequence[int]] = None) -> None:
         """masks: FedRA layer masks for the *kept* clients (aligned with
         client_adapters — departures may drop some distributed clients).
         indices: positions of the kept clients within the distributed list
-        (needed by residual aggregation)."""
+        (needed by residual aggregation).
+        assoc: per-kept-client RSU index within this task's group (required
+        for non-trivial tiers; routes each upload into its RSU partial)."""
         if masks is not None:
             self._masks = list(masks)
+        if not self.tier.trivial:
+            self._tier_aggregate_list(client_adapters, weights, assoc)
+            return
         if not client_adapters:
             self.round += 1
             return
@@ -178,9 +208,14 @@ class RSUServer:
             masks:    optional (n_g, L) FedRA layer masks
             indices:  positions of the group's clients within the
                       distributed list (residual aggregation)
+            assoc:    (n_g,) per-lane RSU index (non-trivial tiers; padded
+                      lanes may carry any index — their weight is 0)
         Equivalent to :meth:`aggregate` over the concatenated clients, but
         each rank group is reduced with one vectorized contraction.
         """
+        if not self.tier.trivial:
+            self._tier_aggregate_grouped(groups)
+            return
         if not groups:
             self.round += 1
             return
@@ -220,6 +255,105 @@ class RSUServer:
         else:
             raise ValueError(self.method)
         self.round += 1
+
+    # ------------------------------------------------------------------
+    # Two-tier hierarchy: per-RSU partials + periodic staleness-weighted
+    # sync (non-trivial RSUTierSpec only; the trivial tier never gets here)
+    # ------------------------------------------------------------------
+    def _tier_aggregate_list(self, client_adapters, weights, assoc) -> None:
+        """Serial-engine path: route per-client trees into RSU partials."""
+        K = self.tier.num_rsus_per_task
+        if client_adapters and assoc is None:
+            raise ValueError("non-trivial tier aggregation needs assoc")
+        refreshed = {}
+        for k in range(K):
+            sel = [i for i, a in enumerate(assoc or []) if int(a) == k]
+            if not sel:
+                continue
+            subset = [client_adapters[i] for i in sel]
+            w = [float(weights[i]) for i in sel]
+            if self.method == "ours":
+                refreshed[k] = (agg.aggregate_merged(subset, w,
+                                                     self.lora.scale),
+                                sum(w))
+            else:   # hetlora: factor-padded partial at max_rank
+                refreshed[k] = (agg.aggregate_hetlora(subset, w,
+                                                      self.lora.max_rank),
+                                sum(w))
+        self._tier_commit(refreshed)
+
+    def _tier_aggregate_grouped(self, groups) -> None:
+        """Batched-engine path: segment-sum every stacked rank group, then
+        combine the per-group partials by their raw segment weights."""
+        K = self.tier.num_rsus_per_task
+        acc = None
+        tot = jnp.zeros((K,), jnp.float32)
+        for g in groups:
+            if g.get("assoc") is None:
+                raise ValueError("non-trivial tier aggregation needs assoc "
+                                 "on every group")
+            if self.method == "ours":
+                part, seg_w = agg.aggregate_merged_padded_segmented(
+                    g["adapters"], g["weights"], g["assoc"], K,
+                    self.lora.scale)
+            else:
+                part, seg_w = agg.aggregate_hetlora_segmented(
+                    g["adapters"], g["weights"], g["assoc"], K,
+                    self.lora.max_rank)
+            # un-normalize so partials combine across rank groups by raw
+            # data weight, then renormalize once at the end
+            raw = jax.tree_util.tree_map(
+                lambda x: x * seg_w.reshape((K,) + (1,) * (x.ndim - 1)), part)
+            acc = raw if acc is None else jax.tree_util.tree_map(
+                jnp.add, acc, raw)
+            tot = tot + seg_w
+        refreshed = {}
+        if acc is not None:
+            den = jnp.maximum(tot, 1e-12)
+            norm = jax.tree_util.tree_map(
+                lambda x: x / den.reshape((K,) + (1,) * (x.ndim - 1)), acc)
+            tot_host = np.asarray(tot)   # one device sync, not K
+            for k in range(K):
+                if tot_host[k] > 0.0:
+                    refreshed[k] = (jax.tree_util.tree_map(
+                        lambda x: x[k], norm), float(tot_host[k]))
+        self._tier_commit(refreshed)
+
+    def _tier_commit(self, refreshed) -> None:
+        """Update partial state with this round's refreshes, then sync the
+        global model every ``sync_period`` rounds."""
+        K = self.tier.num_rsus_per_task
+        if self.partials is None:
+            self.partials = [None] * K
+        for k in range(K):
+            if k in refreshed:
+                self.partials[k], w = refreshed[k]
+                self.partial_w[k] = w
+                self.partial_age[k] = 0
+            elif self.partial_w[k] > 0:
+                self.partial_age[k] += 1
+        if (self.round + 1) % self.tier.sync_period == 0:
+            live = [k for k in range(K) if self.partial_w[k] > 0]
+            if live:
+                merged = agg.merge_partials(
+                    agg.stack_partials([self.partials[k] for k in live]),
+                    self.partial_w[live], self.partial_age[live],
+                    self.tier.staleness_decay)
+                if self.method == "ours":
+                    self.merged = merged
+                else:
+                    self.global_adapters = merged
+            # a fresh window: only new uploads count toward the next sync
+            self.partial_w[:] = 0.0
+            self.partial_age[:] = 0
+        self.round += 1
+
+    def load_partials(self, partials: Sequence[Any], weights,
+                      ages) -> None:
+        """Adopt per-RSU partial state computed off-host (fused engine)."""
+        self.partials = list(partials)
+        self.partial_w = np.asarray(weights, np.float64).copy()
+        self.partial_age = np.asarray(ages, np.int64).copy()
 
     def _seg_masks(self, mask: np.ndarray) -> jnp.ndarray:
         # our sim models are single-segment; general case splits by segment

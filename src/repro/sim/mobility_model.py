@@ -23,7 +23,7 @@ velocity is the trace's finite difference.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -56,6 +56,42 @@ class MobilitySimConfig:
     outages: Tuple[OutageSpec, ...] = ()
 
 
+def associate_nearest(pos: np.ndarray, centers: np.ndarray,
+                      radii: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Nearest-in-range RSU association (two-tier hierarchy, pure part).
+
+    pos: (V, 2) vehicle positions; centers: (K, 2) RSU positions; radii:
+    (K,) effective coverage radii (0 during outages). Returns
+    ``(assoc, dist)``: assoc (V,) int64 — index of the nearest center whose
+    coverage contains the vehicle, or ``-1`` when no center is in range
+    (the vehicle becomes a zero-weight lane downstream); dist (V, K) —
+    distances to every center. Idempotent by construction (a pure function
+    of positions and geometry).
+    """
+    pos = np.asarray(pos, np.float64)
+    centers = np.asarray(centers, np.float64)
+    radii = np.asarray(radii, np.float64)
+    d = np.linalg.norm(pos[:, None, :] - centers[None], axis=-1)   # (V, K)
+    in_range = d <= radii[None, :]
+    nearest = np.argmin(np.where(in_range, d, np.inf), axis=1)
+    assoc = np.where(in_range.any(axis=1), nearest, -1)
+    return assoc.astype(np.int64), d
+
+
+def handoff_events(prev_assoc: np.ndarray,
+                   assoc: np.ndarray) -> np.ndarray:
+    """True where a vehicle's association CHANGED between two valid RSUs.
+
+    Entering coverage (-1 → k) and leaving it (k → -1) are not handoffs:
+    there is no source/target RSU pair to migrate adapter state between, so
+    no migration penalty applies. A handoff fires iff both associations are
+    valid and differ.
+    """
+    prev_assoc = np.asarray(prev_assoc)
+    assoc = np.asarray(assoc)
+    return (prev_assoc >= 0) & (assoc >= 0) & (prev_assoc != assoc)
+
+
 def reflect_into(pos: np.ndarray, vel: np.ndarray, ax: int,
                  lo: float, hi: float) -> None:
     """Exact boundary reflection of ``pos[:, ax]`` into [lo, hi], in place.
@@ -82,6 +118,10 @@ class MobilityModel:
         rng = np.random.default_rng(cfg.seed)
         self._rng = rng
         self.tick = 0                  # number of step() calls so far
+        # per-task association memory for handoff detection: task_id ->
+        # {"tick", "prev", "cur"} — see round_view_group (idempotent per
+        # tick: re-querying the same tick never re-advances "prev")
+        self._assoc_log: Dict[int, Dict[str, np.ndarray]] = {}
         self._trace = None
         if cfg.trace is not None:
             from repro.sim.trajectories import build_trace
@@ -103,7 +143,8 @@ class MobilityModel:
 
     @staticmethod
     def place_rsus(num_tasks: int, area: float, radius: float,
-                   seed: int = 0, layout: str = "grid") -> List[RSU]:
+                   seed: int = 0, layout: str = "grid",
+                   num_per_task: int = 1) -> List[RSU]:
         """RSU placement, clipped into [0, area] (Gaussian jitter used to
         silently push edge RSUs out of the map, shrinking their coverage).
 
@@ -113,7 +154,22 @@ class MobilityModel:
             corridor (highway deployments)
           - "sparse": uniform random draws rejected toward spread (rural
             deployments with large inter-RSU gaps)
+
+        num_per_task > 1 (two-tier hierarchy): each task deploys a PRIMARY
+        RSU at the legacy position (drawn first, from the same stream as
+        the 1-RSU layout — so the 1-RSU placement is unchanged regardless
+        of num_per_task) plus satellites around it. Each satellite draws
+        its jitter from its own (task, rsu) subkey stream — a shared
+        per-task key would collapse every satellite onto the same jittered
+        offset. Satellites ring the primary on grid/sparse layouts and
+        alternate along the road on corridor layouts. Primaries keep
+        ``rsu_id = task`` under ANY num_per_task (an OutageSpec written
+        against the 1-RSU layout keeps meaning "task t's primary");
+        satellites are numbered above num_tasks:
+        ``rsu_id = num_tasks + task*(num_per_task-1) + (j-1)``.
         """
+        if num_per_task < 1:
+            raise ValueError("num_per_task must be >= 1")
         rng = np.random.default_rng(seed + 17)
         rsus = []
         if layout == "grid":
@@ -143,11 +199,35 @@ class MobilityModel:
         else:
             raise ValueError(f"unknown rsu_layout {layout!r}; "
                              "have ('grid', 'corridor', 'sparse')")
-        return [RSU(rsu_id=t,
-                    xy=(float(np.clip(x, 0.0, area)),
-                        float(np.clip(y, 0.0, area))),
-                    radius=radius, task_id=t)
-                for t, (x, y) in enumerate(rsus)]
+        out: List[RSU] = []
+        for t, (px, py) in enumerate(rsus):
+            group = [(px, py)]
+            for j in range(1, num_per_task):
+                # per-(task, rsu) subkey: independent jitter per satellite
+                sub = np.random.default_rng(
+                    np.random.SeedSequence([seed + 17, t, j]))
+                if layout == "corridor":
+                    # alternate down-/up-road of the primary
+                    step = 0.8 * radius * ((j + 1) // 2)
+                    dx = step * (1.0 if j % 2 == 1 else -1.0)
+                    dy = sub.normal(0, area * 0.02)
+                    dx += sub.normal(0, radius * 0.05)
+                else:
+                    # ring around the primary; coverages overlap but the
+                    # nearest-in-range winner differs across the cell
+                    ang = (2.0 * np.pi * (j - 1) / max(num_per_task - 1, 1)
+                           + sub.uniform(-0.2, 0.2))
+                    rad = 0.6 * radius * sub.uniform(0.8, 1.2)
+                    dx, dy = rad * np.cos(ang), rad * np.sin(ang)
+                group.append((px + dx, py + dy))
+            for j, (x, y) in enumerate(group):
+                rsu_id = (t if j == 0
+                          else num_tasks + t * (num_per_task - 1) + (j - 1))
+                out.append(RSU(rsu_id=rsu_id,
+                               xy=(float(np.clip(x, 0.0, area)),
+                                   float(np.clip(y, 0.0, area))),
+                               radius=radius, task_id=t))
+        return out
 
     # -- dynamics ---------------------------------------------------------
     def step(self) -> None:
@@ -232,6 +312,70 @@ class MobilityModel:
             "distances": self.distances_to(rsu),
             # §IV-E migration target exists iff any in-coverage vehicle is
             # predicted to stay (a departing vehicle is never its own peer)
+            "peer_available": bool(staying.any()),
+        }
+
+    def round_view_group(self, rsus: Sequence[RSU],
+                         horizon_s: Optional[float] = None) -> dict:
+        """:meth:`round_view` generalized to a task's RSU GROUP (two-tier
+        hierarchy). Vehicles are associated to the nearest in-range RSU of
+        the group; the snapshot gains:
+
+          assoc    (V,) int64 — local RSU index within the group, -1 when
+                   no RSU of the group is in range (zero-weight lane);
+          handoff  (V,) bool — the association changed between two VALID
+                   RSUs since the previous tick (adapter migration);
+          distances (V,) — to the ASSOCIATED RSU (group RSU 0 for
+                   unassociated vehicles; they are masked downstream).
+
+        For a 1-RSU group every field reduces exactly to
+        ``round_view(rsus[0])`` (``assoc`` degenerates to 0/-1 and
+        ``handoff`` can never fire) — the hierarchy's equivalence contract.
+
+        Departure prediction is group-wide: a vehicle departs when its
+        extrapolated position leaves the coverage of EVERY RSU of the group
+        — moving between two RSUs of the same task is a handoff, not a
+        departure.
+
+        Handoff memory is keyed on the group's task_id and advances at most
+        once per mobility tick: re-querying the same tick recomputes the
+        same snapshot (idempotent), so serial planning, fused staging and
+        diagnostic probes can all call this without double-advancing.
+        """
+        assert rsus, "round_view_group needs at least one RSU"
+        task_id = rsus[0].task_id
+        h = self.cfg.dt if horizon_s is None else horizon_s
+        centers = np.array([r.xy for r in rsus], np.float64)
+        radii = np.array([self.effective_radius(r) for r in rsus],
+                         np.float64)
+        assoc, d = associate_nearest(self.pos, centers, radii)
+        assoc = np.where(self.present, assoc, -1)
+        active = assoc >= 0
+        # distances to the associated RSU (column 0 for unassociated lanes
+        # — identical to the single-RSU view when the group has one RSU)
+        dist = d[np.arange(len(assoc)), np.maximum(assoc, 0)]
+        # departure: the extrapolated position escapes the whole group
+        future = self.pos + self.vel * h
+        d_future = np.linalg.norm(future[:, None, :] - centers[None],
+                                  axis=-1)
+        future_covered = (d_future <= radii[None, :]).any(axis=1)
+        departing = active & ~future_covered
+        staying = active & ~departing
+        # handoff memory: advance once per tick, idempotent within a tick
+        log = self._assoc_log.get(task_id)
+        if log is None or log["tick"] != self.tick:
+            prev = (log["cur"] if log is not None
+                    else np.full(len(assoc), -1, np.int64))
+            log = {"tick": self.tick, "prev": prev, "cur": assoc}
+            self._assoc_log[task_id] = log
+        handoff = handoff_events(log["prev"], assoc)
+        return {
+            "active": active,
+            "departing": departing,
+            "staying": staying,
+            "distances": dist,
+            "assoc": assoc,
+            "handoff": handoff,
             "peer_available": bool(staying.any()),
         }
 

@@ -16,6 +16,11 @@ related work (arXiv 2503.06468) shows dominate vehicular-FL outcomes:
                     coverage and long dead zones
   rsu-outage        mid-run coverage loss per RSU followed by handoff
                     storms when coverage returns
+  dense-rsu         TWO-TIER HIERARCHY: 3 RSUs per task with per-round
+                    nearest-in-range association and periodic global sync
+  handoff-storm     fast corridor traffic across 4 RSUs per task: constant
+                    re-association, adapter-migration penalties, stale
+                    partials merged every few rounds
 
 Adding a preset: write a builder returning a SimConfig and decorate it
 with ``@register_scenario(name, description)`` (see README "Scenarios").
@@ -27,7 +32,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.config import EnergyAllocConfig, LoRAConfig, OutageSpec, TraceSpec
+from repro.config import (EnergyAllocConfig, LoRAConfig, OutageSpec,
+                          RSUTierSpec, TraceSpec)
 from repro.sim.mobility_model import MobilitySimConfig
 from repro.sim.simulator import SimConfig
 
@@ -194,3 +200,45 @@ def rsu_outage(method: str = "ours", rounds: Optional[int] = None,
                         speed_std=3.0, gm_alpha=0.85, hotspot_pull=0.4,
                         seed=seed))
     return _cfg("rsu-outage", method, R, seed, 16, 2, ms, **overrides)
+
+
+@register_scenario(
+    "dense-rsu",
+    "two-tier hierarchy over a dense city: 3 RSUs per task, nearest-"
+    "in-range association each round, per-RSU partial aggregation and a "
+    "staleness-weighted global sync every 2 rounds")
+def dense_rsu(method: str = "ours", rounds: Optional[int] = None,
+              seed: int = 0, **overrides: Any) -> SimConfig:
+    R = _horizon(rounds, 24)
+    ms = MobilitySimConfig(
+        # per-RSU cells are deliberately smaller than the map so the
+        # nearest-in-range winner changes as vehicles cross the city
+        area=3200.0, coverage_radius=900.0, dt=10.0, seed=seed,
+        rsu_layout="grid",
+        trace=TraceSpec(kind="synthetic", length=R + 1, mean_speed=11.0,
+                        speed_std=3.5, gm_alpha=0.85, hotspot_pull=0.4,
+                        seed=seed))
+    overrides.setdefault("rsu_tier", RSUTierSpec(
+        num_rsus_per_task=3, sync_period=2, staleness_decay=0.7,
+        handoff_energy=6.0, handoff_latency=0.4))
+    return _cfg("dense-rsu", method, R, seed, 18, 3, ms, **overrides)
+
+
+@register_scenario(
+    "handoff-storm",
+    "fast corridor traffic across 4 RSUs per task: constant re-"
+    "association (every handoff charges an adapter-migration penalty), "
+    "partials go stale between syncs every 3 rounds")
+def handoff_storm(method: str = "ours", rounds: Optional[int] = None,
+                  seed: int = 0, **overrides: Any) -> SimConfig:
+    R = _horizon(rounds, 24)
+    ms = MobilitySimConfig(
+        area=6400.0, coverage_radius=1000.0, dt=12.0, seed=seed,
+        rsu_layout="corridor",
+        trace=TraceSpec(kind="synthetic", length=R + 1, mean_speed=30.0,
+                        speed_std=6.0, gm_alpha=0.93, hotspot_pull=0.1,
+                        corridor_frac=0.1, seed=seed))
+    overrides.setdefault("rsu_tier", RSUTierSpec(
+        num_rsus_per_task=4, sync_period=3, staleness_decay=0.6,
+        handoff_energy=12.0, handoff_latency=0.8))
+    return _cfg("handoff-storm", method, R, seed, 16, 2, ms, **overrides)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (EnergyAllocConfig, LoRAConfig, MobilityConfig,
-                          ModelConfig, UCBDualConfig, get_arch)
+                          ModelConfig, RSUTierSpec, UCBDualConfig, get_arch)
 from repro.core import cost_model as cm
 from repro.core import energy_alloc, mobility as mob
 from repro.core import ucb_dual
@@ -66,6 +66,10 @@ class SimConfig:
                                       EnergyAllocConfig(e_total=900.0))
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
     mobility_sim: MobilitySimConfig = field(default_factory=MobilitySimConfig)
+    # two-tier RSU hierarchy: RSUs per task, association handoffs, periodic
+    # staleness-weighted global sync. The trivial default (1 RSU per task,
+    # sync every round) is regression-pinned to the pre-hierarchy engines.
+    rsu_tier: RSUTierSpec = field(default_factory=RSUTierSpec)
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     departure_fraction: float = 0.5   # fraction of local steps done at exit
     bytes_per_param: int = 4
@@ -166,16 +170,22 @@ class IoVSimulator:
         ms = dataclasses.replace(cfg.mobility_sim,
                                  num_vehicles=cfg.num_vehicles,
                                  seed=cfg.seed)
-        self.rsus = MobilityModel.place_rsus(cfg.num_tasks, ms.area,
-                                             ms.coverage_radius,
-                                             seed=cfg.seed,
-                                             layout=ms.rsu_layout)
-        self.mobility = MobilityModel(ms, self.rsus)
+        all_rsus = MobilityModel.place_rsus(
+            cfg.num_tasks, ms.area, ms.coverage_radius, seed=cfg.seed,
+            layout=ms.rsu_layout,
+            num_per_task=cfg.rsu_tier.num_rsus_per_task)
+        # rsu_groups[ti] is task ti's RSU tier; self.rsus keeps the primary
+        # per task (for the trivial tier this is exactly the legacy list)
+        self.rsu_groups = [[r for r in all_rsus if r.task_id == t]
+                           for t in range(cfg.num_tasks)]
+        self.rsus = [g[0] for g in self.rsu_groups]
+        self.mobility = MobilityModel(ms, all_rsus)
         self.channel = ChannelModel(cfg.channel, seed=cfg.seed + 3)
         self.servers = [RSUServer(self.model_cfg, cfg.lora,
                                   server_method(cfg.method),
                                   seed=cfg.seed + 7 * t,
-                                  residual=is_residual(cfg.method))
+                                  residual=is_residual(cfg.method),
+                                  tier=cfg.rsu_tier)
                         for t in range(cfg.num_tasks)]
         K = len(cfg.lora.candidate_ranks)
         self.ucb_states = [ucb_dual.init_state(cfg.num_vehicles, K)
@@ -283,7 +293,9 @@ class IoVSimulator:
         """Phase 1: everything a task round needs before training starts."""
         cfg = self.cfg
         rsu = self.rsus[ti]
-        view = self.mobility.round_view(rsu)   # same snapshot fused stages
+        # same snapshot the fused engine stages; for the trivial tier the
+        # group view reduces exactly to round_view(rsu)
+        view = self.mobility.round_view_group(self.rsu_groups[ti])
         active = view["active"]
         ranks, arms = self._select_ranks(ti, active)
         active_ids = np.where(active)[0]
@@ -307,7 +319,8 @@ class IoVSimulator:
                 "ranks": ranks, "arms": arms, "departing": departing,
                 "staying": staying, "adapters_list": adapters_list,
                 "fedra_masks": fedra_masks, "steps_list": steps_list,
-                "frac_list": frac_list}
+                "frac_list": frac_list, "distances": view["distances"],
+                "assoc": view["assoc"], "handoff": view["handoff"]}
 
     # ------------------------------------------------------------------
     def _train_serial(self, plan: Dict[str, Any]) -> Dict[str, Any]:
@@ -430,9 +443,13 @@ class IoVSimulator:
         active_ids = plan["active_ids"]
         ranks, arms = plan["ranks"], plan["arms"]
         departing, staying = plan["departing"], plan["staying"]
-        dists = self.mobility.distances_to(rsu)
+        handoff = plan["handoff"]
+        tier = cfg.rsu_tier
+        # distances to each vehicle's ASSOCIATED RSU (the primary for the
+        # trivial tier — bitwise the legacy distances_to(rsu) array);
         # one canonical pass over the fading RNG (shared with the fused
         # engine's staging — identical draws in identical order)
+        dists = plan["distances"]
         rate_down_v, rate_up_v = self.channel.round_rates(
             self.rsu_profile.tx_power,
             np.asarray([p.tx_power for p in self.dev_profiles]),
@@ -442,6 +459,7 @@ class IoVSimulator:
         kept_weights: List[float] = []
         kept_masks: List[Any] = []
         kept_adapters: List[Any] = []    # serial engine only
+        kept_assoc: List[int] = []       # associated RSU per kept client
         per_v_reward = np.zeros(cfg.num_vehicles, np.float32)
         per_v_energy = np.zeros(cfg.num_vehicles, np.float32)
         costs_list: List[cm.RoundCosts] = []
@@ -478,6 +496,12 @@ class IoVSimulator:
             contribute = True
             extra_energy = 0.0
             extra_latency = 0.0
+            if not tier.trivial and bool(handoff[v]):
+                # adapter migration between RSUs of the task's tier
+                ho_lat, ho_e = cm.handoff_costs(
+                    tier.handoff_latency, tier.handoff_energy, True)
+                extra_energy += float(ho_e)
+                extra_latency += float(ho_lat)
             if dep and self.spec.mobility_aware:
                 peer = self.mobility.nearby_peer(rsu, v, staying)
                 dec = mob.decide_fallback(
@@ -488,8 +512,8 @@ class IoVSimulator:
                 if dec.strategy == mob.ABANDON:
                     contribute = False
                 elif dec.strategy == mob.MIGRATE:
-                    extra_energy = cfg.mobility.migration_energy
-                    extra_latency = cfg.mobility.migration_latency
+                    extra_energy += cfg.mobility.migration_energy
+                    extra_latency += cfg.mobility.migration_latency
             elif dep:   # baseline: departure loses the update
                 contribute = False
 
@@ -502,6 +526,7 @@ class IoVSimulator:
             if contribute:
                 kept_idx.append(i)
                 kept_weights.append(float(len(self.client_data[ti][v])))
+                kept_assoc.append(int(plan["assoc"][v]))
                 if mask is not None:
                     kept_masks.append(mask)
                 if tr["ads_list"] is not None:
@@ -511,7 +536,7 @@ class IoVSimulator:
         agg_costs = cm.rsu_agg_costs(self.rsu_profile, len(kept_idx))
         summary = cm.task_round_summary(costs_list, agg_costs)
         self._aggregate_task(server, plan, tr, kept_idx, kept_weights,
-                             kept_masks, kept_adapters)
+                             kept_masks, kept_adapters, kept_assoc)
 
         # global accuracy on the held-out task eval set
         gad = server.eval_adapters()
@@ -543,23 +568,27 @@ class IoVSimulator:
                 "lambda": lam, "mean_rank": mean_rank,
                 "active": int(len(active_ids)),
                 "departing": int(departing.sum()),
+                "handoffs": int((handoff[active_ids]).sum())
+                if len(active_ids) else 0,
                 "fallbacks": dict(n_fallback),
                 "comm_params": int(comm_params),
                 "budget": float(budget)}
 
     # ------------------------------------------------------------------
     def _aggregate_task(self, server, plan, tr, kept_idx, kept_weights,
-                        kept_masks, kept_adapters) -> None:
+                        kept_masks, kept_adapters, kept_assoc) -> None:
         """Upload + aggregation. The batched engine hands the server the
         kept clients as stacked per-rank groups (one lane-gather per group);
-        the serial engine keeps the per-client list path."""
+        the serial engine keeps the per-client list path. kept_assoc routes
+        each upload into its RSU partial under non-trivial tiers."""
         if tr["groups"] is None or not kept_idx:
             server.aggregate(kept_adapters, kept_weights or [1.0],
                              masks=kept_masks if kept_masks else None,
-                             indices=kept_idx)
+                             indices=kept_idx, assoc=kept_assoc)
             return
         keep = set(kept_idx)
         w_of = dict(zip(kept_idx, kept_weights))
+        a_of = dict(zip(kept_idx, kept_assoc))
         mask_of = dict(zip(kept_idx, kept_masks)) if kept_masks else {}
         gspecs = []
         for r in sorted(tr["groups"]):
@@ -585,7 +614,11 @@ class IoVSimulator:
                 "adapters": sub,
                 "weights": weights,
                 "masks": masks,
-                "indices": gi + [gi[0]] * npad})
+                "indices": gi + [gi[0]] * npad,
+                # padded lanes replicate lane 0's association; their zero
+                # weight keeps them exact no-ops in the segment sums
+                "assoc": np.asarray([a_of[i] for i in gi]
+                                    + [a_of[gi[0]]] * npad, np.int32)})
         server.aggregate_grouped(gspecs)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,96 @@
+"""Regenerate tests/data/hierarchy_regression.json.
+
+The fixture pins the PRE-hierarchy trajectories of the serial and fused
+engines on a small config and on the urban-grid scenario preset. The
+hierarchy PR's trivial tier (num_rsus_per_task=1, sync_period=1) must keep
+reproducing these numbers exactly — see tests/test_rsu_tier.py.
+
+Run from the repo root:
+    PYTHONPATH=src python tests/data/gen_hierarchy_fixture.py
+"""
+import json
+import os
+
+import numpy as np
+
+
+def _tiny_cfg():
+    from repro.configs import vit_base_paper
+    return vit_base_paper.vit_base_paper().with_overrides(
+        name="vit-test-hier", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+
+
+def _capture(history):
+    out = []
+    for r in history:
+        out.append({
+            "budgets": [float(b) for b in r["budgets"]],
+            "accuracy": float(r["accuracy"]),
+            "energy": float(r["energy"]),
+            "latency": float(r["latency"]),
+            "reward": float(r["reward"]),
+            "tasks": [{
+                "mean_rank": float(t["mean_rank"]),
+                "comm_params": int(t["comm_params"]),
+                "active": int(t["active"]),
+                "departing": int(t["departing"]),
+                "energy": float(t["energy"]),
+                "latency": float(t["latency"]),
+                "accuracy": float(t["accuracy"]),
+                "lambda": float(t["lambda"]),
+            } for t in r["tasks"]],
+        })
+    return out
+
+
+def main():
+    from repro.config import LoRAConfig
+    from repro.sim import scenarios
+    from repro.sim.simulator import IoVSimulator, SimConfig
+
+    lora = LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8))
+    fix = {}
+
+    def base_cfg(engine):
+        return SimConfig(method="ours", rounds=3, num_vehicles=8,
+                         num_tasks=2, seed=3, local_steps=2, engine=engine)
+
+    fix["base_serial"] = _capture(IoVSimulator(base_cfg("serial")).run())
+    sim_f = IoVSimulator(base_cfg("fused"))
+    sim_f.run_scanned(3)
+    fix["base_fused_scanned"] = _capture(sim_f.history)
+
+    def scen_cfg(engine):
+        return scenarios.build_config(
+            "urban-grid", method="ours", rounds=3, seed=1, engine=engine,
+            train_arch=_tiny_cfg(), lora=lora, local_steps=1)
+
+    fix["urban_serial"] = _capture(IoVSimulator(scen_cfg("serial")).run())
+    sim_uf = IoVSimulator(scen_cfg("fused"))
+    sim_uf.run_scanned(3)
+    fix["urban_fused_scanned"] = _capture(sim_uf.history)
+
+    # 1-RSU layout coordinates per layout style (numpy Generator streams are
+    # platform-stable, so exact equality is safe)
+    from repro.sim.mobility_model import MobilityModel
+    fix["place_rsus"] = {}
+    for layout in ("grid", "corridor", "sparse"):
+        rsus = MobilityModel.place_rsus(3, 3000.0, 1100.0, seed=0,
+                                        layout=layout)
+        fix["place_rsus"][layout] = [[float(r.xy[0]), float(r.xy[1])]
+                                     for r in rsus]
+
+    path = os.path.join(os.path.dirname(__file__),
+                        "hierarchy_regression.json")
+    with open(path, "w") as f:
+        json.dump(fix, f, indent=1)
+    print(f"wrote {path}")
+    for k, v in fix.items():
+        if k != "place_rsus":
+            print(f"  {k}: {len(v)} rounds, "
+                  f"E0={v[0]['energy']:.6f} acc_last={v[-1]['accuracy']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

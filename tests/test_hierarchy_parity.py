@@ -1,0 +1,201 @@
+"""Engine-parity sweep across scenario presets × aggregation rules ×
+multi-RSU tiers (ISSUE 4 satellite).
+
+Every cell runs the serial reference against an engine-under-test on the
+SAME preset/seed and asserts the histories replay each other: selected
+ranks, comm volume, active/departing/handoff counts, §III-C energy, global
+accuracy and budgets — plus the engine's serial-replay deviation
+(``engine_check_dev``) where the *_check engine exists:
+
+  merged ("ours")  — serial vs fused_check (the fused engine covers the
+                     ours family; fused_check replays the serial
+                     LocalTrainer on the identical staged batches)
+  hetlora          — serial vs batched_check (the fused engine does not
+                     cover factor-averaging baselines; the batched engine
+                     is the vectorized path for them)
+
+Fast tier: two representative cells (kept small — the CI fast tier has a
+2-minute budget). Full grid (every preset × both rules × tier on/off):
+@slow.
+"""
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import LoRAConfig, RSUTierSpec
+from repro.sim import scenarios
+
+LORA = LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8))
+
+# a non-trivial override tier for presets that ship without one: 2 RSUs
+# per task, partials synced every 2 rounds, nonzero migration penalty so
+# handoff accounting is exercised, not just association
+TIER_ON = RSUTierSpec(num_rsus_per_task=2, sync_period=2,
+                      staleness_decay=0.7, handoff_energy=5.0,
+                      handoff_latency=0.3)
+TIER_OFF = RSUTierSpec()
+
+
+def _tiny_cfg():
+    from repro.configs import vit_base_paper
+    return vit_base_paper.vit_base_paper().with_overrides(
+        name="vit-test-par", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+
+
+def _sim(name, engine, method, tier, rounds, seed=1):
+    from repro.sim.simulator import IoVSimulator
+    cfg = scenarios.build_config(name, method=method, rounds=rounds,
+                                 seed=seed, engine=engine,
+                                 train_arch=_tiny_cfg(), lora=LORA,
+                                 local_steps=1, rsu_tier=tier)
+    return IoVSimulator(cfg)
+
+
+def _assert_parity(hs, he, rel=1e-4):
+    """Serial history hs vs engine history he."""
+    assert len(hs) == len(he)
+    for r_s, r_e in zip(hs, he):
+        for t_s, t_e in zip(r_s["tasks"], r_e["tasks"]):
+            assert t_s["active"] == t_e["active"]
+            assert t_s["departing"] == t_e["departing"]
+            assert t_s["handoffs"] == t_e["handoffs"]
+            assert t_s["comm_params"] == t_e["comm_params"]
+            assert t_s["mean_rank"] == pytest.approx(t_e["mean_rank"],
+                                                     abs=1e-5)
+            assert t_s["energy"] == pytest.approx(t_e["energy"], rel=rel)
+            assert t_s["lambda"] == pytest.approx(t_e["lambda"], abs=1e-4)
+        assert r_s["energy"] == pytest.approx(r_e["energy"], rel=rel)
+        # accuracy is quantized by the eval-set size: one borderline argmax
+        # flip under float-noise adapters moves it by ~1/N ≈ 3.5e-3 on the
+        # tiny test arch, so compare at one-flip granularity
+        assert r_s["accuracy"] == pytest.approx(r_e["accuracy"], abs=8e-3)
+        assert r_s["budgets"] == pytest.approx(r_e["budgets"], rel=1e-5)
+
+
+def _tree_norm(tree):
+    import jax.numpy as jnp
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                              for x in jax.tree_util.tree_leaves(tree))))
+
+
+def _run_cell(name, method, tier, rounds=2, seed=1):
+    check_engine = "fused_check" if method == "ours" else "batched_check"
+    s = _sim(name, "serial", method, tier, rounds, seed)
+    e = _sim(name, check_engine, method, tier, rounds, seed)
+    hs, he = s.run(), e.run()
+    _assert_parity(hs, he)
+    # the *_check replay of the serial trainer on identical staged batches
+    # must sit at numerical noise. Single-round precision is pinned at
+    # 1e-5 by tests/test_fused_engine.py / test_batched_engine.py; across
+    # this sweep's multi-round cells the vmap-vs-serial GEMM reassociation
+    # noise is amplified by Adam's 1/√v normalization (worst observed
+    # ~3e-4 on highway-corridor). A REAL divergence — wrong batch, wrong
+    # adapter, wrong step count, wrong scale — lands at the update scale,
+    # orders of magnitude above this bound.
+    assert e.engine_check_dev < 1e-3, (name, method)
+    # aggregated server state: presence must agree engine-to-engine, and
+    # the states must sit at the same scale. Elementwise closeness is NOT
+    # asserted here: over 3 rounds the seeded randomized SVD rotates
+    # near-degenerate singular directions under 1e-5 perturbations, so
+    # engines drift in state while every trajectory metric still replays
+    # (the calibrated elementwise bound lives in
+    # test_fused_engine.py::test_sim_regression_fused_matches_serial).
+    for srv_s, srv_e in zip(s.servers, e.servers):
+        st_s = (srv_s.merged if method == "ours"
+                else srv_s.global_adapters)
+        st_e = (srv_e.merged if method == "ours"
+                else srv_e.global_adapters)
+        assert (st_s is None) == (st_e is None)
+        if st_s is not None:
+            na, nb = _tree_norm(st_s), _tree_norm(st_e)
+            assert np.isfinite(na) and np.isfinite(nb)
+            assert abs(na - nb) <= 0.5 * max(na, nb, 1e-6)
+        if not tier.trivial:
+            assert np.allclose(srv_s.partial_w, srv_e.partial_w,
+                               rtol=1e-4)
+            assert np.array_equal(srv_s.partial_age, srv_e.partial_age)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# Fast subset
+# ---------------------------------------------------------------------------
+
+def test_parity_dense_rsu_merged_fast():
+    """Native multi-RSU preset, merged rule, serial vs fused."""
+    _run_cell("dense-rsu", "ours", TIER_ON)
+
+
+def test_parity_urban_grid_hetlora_tier_fast():
+    """Tier override on a 1-RSU preset, hetlora rule, serial vs batched."""
+    _run_cell("urban-grid", "hetlora", TIER_ON)
+
+
+# ---------------------------------------------------------------------------
+# Full grid (slow): every preset × {merged, hetlora} × tier on/off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", scenarios.list_scenarios())
+@pytest.mark.parametrize("method", ["ours", "hetlora"])
+@pytest.mark.parametrize("tier", [TIER_OFF, TIER_ON],
+                         ids=["tier-off", "tier-on"])
+def test_parity_grid(name, method, tier):
+    hs = _run_cell(name, method, tier, rounds=3)
+    if not tier.trivial:
+        # the sweep is only meaningful if the hierarchy engaged somewhere:
+        # at minimum the association machinery ran every round (active
+        # counts come from the group view)
+        assert all(isinstance(t["handoffs"], int)
+                   for r in hs for t in r["tasks"])
+
+
+@pytest.mark.slow
+def test_parity_handoff_storm_scanned_after_sync():
+    """run_scanned on a native multi-RSU preset replays per-round fused
+    execution (per-round fresh staging keeps pre-sync rounds exact)."""
+    R = 4
+    a = _sim("handoff-storm", "fused", "ours",
+             TIER_ON, R)
+    b = _sim("handoff-storm", "fused", "ours",
+             TIER_ON, R)
+    ha = a.run()
+    hb = b.run_scanned(R)
+    _assert_parity(ha, hb)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["dense-rsu", "handoff-storm"])
+def test_fused_round_compiles_once_on_hierarchy_presets(name):
+    """Recompile guard extended to the multi-RSU presets: the segmented
+    partial aggregation, staleness sync and handoff accounting must stay
+    inside the ONE jit round program."""
+    compiles = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            if ("Finished XLA compilation of jit(_round_step)"
+                    in record.getMessage()):
+                compiles.append(record.getMessage())
+
+    handler = Capture()
+    logger = logging.getLogger("jax._src.dispatch")
+    logger.addHandler(handler)
+    old_level = logger.level
+    logger.setLevel(logging.DEBUG)
+    try:
+        with jax.log_compiles():
+            sim = _sim(name, "fused", "ours", TIER_ON, 4, seed=1)
+            sim.run()
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+    assert len(compiles) == 1, compiles
+    # the guard is vacuous unless the hierarchy actually churned
+    total_handoffs = sum(t["handoffs"] for r in sim.history
+                         for t in r["tasks"])
+    actives = {tuple(t["active"] for t in r["tasks"]) for r in sim.history}
+    assert total_handoffs > 0 or len(actives) > 1

@@ -1,0 +1,357 @@
+"""Two-tier RSU hierarchy: trivial-tier regression pins, place_rsus
+subkey placement, staleness weights, and partial-merge algebra.
+
+The load-bearing contract (ISSUE 4): ``num_rsus_per_task=1,
+sync_period=1`` must reproduce the PRE-hierarchy serial and fused
+trajectories exactly — pinned against tests/data/hierarchy_regression.json
+(captured from the seed code before the hierarchy landed; regenerate with
+tests/data/gen_hierarchy_fixture.py ONLY when an intentional behavior
+change invalidates it).
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LoRAConfig, RSUTierSpec
+from repro.core import aggregation as agg
+from repro.sim.mobility_model import MobilityModel
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "hierarchy_regression.json")
+LORA = LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8))
+
+
+def _tiny_cfg():
+    from repro.configs import vit_base_paper
+    return vit_base_paper.vit_base_paper().with_overrides(
+        name="vit-test-hier", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+
+
+def _capture(history):
+    out = []
+    for r in history:
+        out.append({
+            "budgets": [float(b) for b in r["budgets"]],
+            "accuracy": float(r["accuracy"]),
+            "energy": float(r["energy"]),
+            "latency": float(r["latency"]),
+            "reward": float(r["reward"]),
+            "tasks": [{
+                "mean_rank": float(t["mean_rank"]),
+                "comm_params": int(t["comm_params"]),
+                "active": int(t["active"]),
+                "departing": int(t["departing"]),
+                "energy": float(t["energy"]),
+                "latency": float(t["latency"]),
+                "accuracy": float(t["accuracy"]),
+                "lambda": float(t["lambda"]),
+            } for t in r["tasks"]],
+        })
+    return out
+
+
+def _assert_pinned(got, ref):
+    """Int fields exact; float fields to 1e-6 relative (the fixture was
+    captured on this platform bit-exactly, but keep CI portable across
+    XLA/BLAS builds)."""
+    assert len(got) == len(ref)
+    for g, e in zip(got, ref):
+        for gt, et in zip(g["tasks"], e["tasks"]):
+            assert gt["comm_params"] == et["comm_params"]
+            assert gt["active"] == et["active"]
+            assert gt["departing"] == et["departing"]
+            assert gt["mean_rank"] == pytest.approx(et["mean_rank"],
+                                                    abs=1e-9)
+            for k in ("energy", "latency", "accuracy", "lambda"):
+                assert gt[k] == pytest.approx(et[k], rel=1e-6, abs=1e-6), k
+        assert g["budgets"] == pytest.approx(e["budgets"], rel=1e-6)
+        for k in ("accuracy", "energy", "latency", "reward"):
+            assert g[k] == pytest.approx(e[k], rel=1e-6, abs=1e-6), k
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Trivial-tier regression pins (pre-PR trajectories)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_trivial_tier_serial_matches_pre_hierarchy(fixture):
+    from repro.sim.simulator import IoVSimulator, SimConfig
+    sim = IoVSimulator(SimConfig(method="ours", rounds=3, num_vehicles=8,
+                                 num_tasks=2, seed=3, local_steps=2,
+                                 engine="serial"))
+    assert sim.cfg.rsu_tier.trivial   # the default tier IS the pre-PR one
+    _assert_pinned(_capture(sim.run()), fixture["base_serial"])
+
+
+@pytest.mark.slow
+def test_trivial_tier_fused_scanned_matches_pre_hierarchy(fixture):
+    from repro.sim.simulator import IoVSimulator, SimConfig
+    sim = IoVSimulator(SimConfig(method="ours", rounds=3, num_vehicles=8,
+                                 num_tasks=2, seed=3, local_steps=2,
+                                 engine="fused"))
+    sim.run_scanned(3)
+    _assert_pinned(_capture(sim.history), fixture["base_fused_scanned"])
+
+
+def test_trivial_tier_scenario_serial_matches_pre_hierarchy(fixture):
+    from repro.sim import scenarios
+    from repro.sim.simulator import IoVSimulator
+    cfg = scenarios.build_config("urban-grid", method="ours", rounds=3,
+                                 seed=1, engine="serial",
+                                 train_arch=_tiny_cfg(), lora=LORA,
+                                 local_steps=1)
+    _assert_pinned(_capture(IoVSimulator(cfg).run()),
+                   fixture["urban_serial"])
+
+
+@pytest.mark.slow
+def test_trivial_tier_scenario_fused_matches_pre_hierarchy(fixture):
+    from repro.sim import scenarios
+    from repro.sim.simulator import IoVSimulator
+    cfg = scenarios.build_config("urban-grid", method="ours", rounds=3,
+                                 seed=1, engine="fused",
+                                 train_arch=_tiny_cfg(), lora=LORA,
+                                 local_steps=1)
+    sim = IoVSimulator(cfg)
+    sim.run_scanned(3)
+    _assert_pinned(_capture(sim.history), fixture["urban_fused_scanned"])
+
+
+# ---------------------------------------------------------------------------
+# place_rsus: 1-RSU layouts pinned; multi-RSU satellites use per-RSU subkeys
+# ---------------------------------------------------------------------------
+
+def test_place_rsus_one_per_task_layouts_pinned(fixture):
+    for layout, ref in fixture["place_rsus"].items():
+        rsus = MobilityModel.place_rsus(3, 3000.0, 1100.0, seed=0,
+                                        layout=layout)
+        got = [[r.xy[0], r.xy[1]] for r in rsus]
+        # numpy Generator streams are platform-stable: exact equality
+        assert got == ref, layout
+
+
+@pytest.mark.parametrize("layout", ["grid", "corridor", "sparse"])
+def test_place_rsus_primaries_independent_of_num_per_task(layout):
+    """Primary draws happen before any satellite subkey is touched, so the
+    K=1 placement is a strict prefix of every K>1 placement."""
+    one = MobilityModel.place_rsus(3, 3000.0, 1100.0, seed=4, layout=layout)
+    many = MobilityModel.place_rsus(3, 3000.0, 1100.0, seed=4,
+                                    layout=layout, num_per_task=3)
+    assert len(many) == 9
+    for t in range(3):
+        primary = [r for r in many if r.task_id == t][0]
+        assert primary.xy == one[t].xy
+        # primaries keep rsu_id == task under any K, so OutageSpec configs
+        # written against the 1-RSU layout keep hitting task t's primary
+        assert primary.rsu_id == t == one[t].rsu_id
+
+
+@pytest.mark.parametrize("layout", ["grid", "corridor", "sparse"])
+def test_place_rsus_satellites_use_distinct_subkeys(layout):
+    """The satellite-placement bug mode: a shared per-task jitter key
+    collapses every satellite onto the same offset. Per-(task, rsu)
+    subkeys must yield pairwise-distinct positions, all inside the map."""
+    area = 3000.0
+    rsus = MobilityModel.place_rsus(2, area, 1100.0, seed=7, layout=layout,
+                                    num_per_task=4)
+    assert len(rsus) == 8
+    for t in range(2):
+        group = [r for r in rsus if r.task_id == t]
+        xys = [r.xy for r in group]
+        assert len(set(xys)) == len(xys), "satellites collapsed"
+        for x, y in xys:
+            assert 0.0 <= x <= area and 0.0 <= y <= area
+        # satellites of the SAME index in different tasks must differ too
+        # (the subkey is per (task, rsu), not per rsu slot)
+    for j in range(1, 4):
+        a = [r for r in rsus if r.task_id == 0][j]
+        b = [r for r in rsus if r.task_id == 1][j]
+        assert a.xy != b.xy
+    # ids: primaries keep rsu_id == task; satellites numbered above
+    # num_tasks (task*(K-1)+(j-1) offset) — all globally unique
+    ids = [r.rsu_id for r in rsus]
+    assert len(set(ids)) == len(ids)
+    assert [r.rsu_id for r in rsus if r.task_id == 0][0] == 0
+    assert [r.rsu_id for r in rsus if r.task_id == 1][0] == 1
+    assert sorted(ids) == list(range(8))
+
+
+def test_place_rsus_rejects_bad_num_per_task():
+    with pytest.raises(ValueError, match="num_per_task"):
+        MobilityModel.place_rsus(2, 3000.0, 1100.0, num_per_task=0)
+
+
+# ---------------------------------------------------------------------------
+# Staleness weights (satellite: unit tests)
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_sync_period_one_is_exactly_one():
+    """With sync_period=1 every contributing partial was refreshed in the
+    sync round itself (age 0) — the discount must be EXACTLY 1.0, which is
+    what makes the trivial tier bit-exact."""
+    w = agg.staleness_weights(jnp.zeros((4,)), 0.6)
+    assert np.asarray(w).tolist() == [1.0, 1.0, 1.0, 1.0]
+
+
+def test_staleness_weights_monotone_in_age():
+    ages = jnp.arange(6, dtype=jnp.float32)
+    w = np.asarray(agg.staleness_weights(ages, 0.7))
+    assert np.all(np.diff(w) < 0), "discount must strictly decrease"
+    # decay=1.0 disables the discount entirely
+    assert np.allclose(np.asarray(agg.staleness_weights(ages, 1.0)), 1.0)
+
+
+def test_sync_weights_normalize_under_fleet_churn():
+    """Churn leaves some RSUs without uploads (data weight 0): they are
+    exact no-ops and the remaining weights still sum to 1."""
+    data_w = jnp.asarray([3.0, 0.0, 5.0, 0.0])
+    ages = jnp.asarray([0.0, 7.0, 2.0, 1.0])
+    wn = np.asarray(agg.sync_weights(data_w, ages, 0.5))
+    assert wn[1] == 0.0 and wn[3] == 0.0
+    assert wn.sum() == pytest.approx(1.0, abs=1e-6)
+    # single live partial ⇒ its normalized weight is exactly 1.0 (x/x)
+    wn1 = np.asarray(agg.sync_weights(jnp.asarray([4.0]),
+                                      jnp.asarray([0.0]), 0.6))
+    assert wn1[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Partial-merge algebra
+# ---------------------------------------------------------------------------
+
+def _rand_fleet(V, d1=12, d2=10, R=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"q": {"a": jnp.asarray(rng.normal(size=(V, d1, R)),
+                                   jnp.float32),
+                  "b": jnp.asarray(rng.normal(size=(V, R, d2)),
+                                   jnp.float32)}}
+
+
+def test_segmented_partials_match_per_subset_aggregation():
+    """Slot k of the segment-sum equals aggregate_merged over the clients
+    associated to RSU k (unassociated lanes are exact no-ops)."""
+    V, K = 6, 3
+    fleet = _rand_fleet(V)
+    weights = jnp.asarray([2.0, 1.0, 0.0, 3.0, 1.5, 2.5])
+    assoc = jnp.asarray([0, 2, -1, 0, 2, 1])
+    parts, seg_w = agg.aggregate_merged_padded_segmented(
+        fleet, weights, assoc, K, scale=2.0)
+    import jax
+    for k in range(K):
+        sel = [v for v in range(V)
+               if int(assoc[v]) == k and float(weights[v]) > 0]
+        ref = agg.aggregate_merged(
+            [jax.tree_util.tree_map(lambda x: x[v], fleet) for v in sel],
+            [float(weights[v]) for v in sel], scale=2.0)
+        got = np.asarray(parts["q"]["delta"][k])
+        assert np.allclose(got, np.asarray(ref["q"]["delta"]), atol=1e-5)
+        assert float(seg_w[k]) == pytest.approx(
+            sum(float(weights[v]) for v in sel))
+
+
+def test_merge_partials_with_period_one_equals_pooled_aggregation():
+    """K>1 with sync_period=1 (ages all 0): the staleness-weighted merge of
+    locally-normalized partials equals the single-RSU pooled aggregate over
+    the same kept set — the hierarchy collapses exactly when it should."""
+    V, K = 8, 3
+    fleet = _rand_fleet(V, seed=3)
+    rng = np.random.default_rng(5)
+    weights = jnp.asarray(rng.uniform(0.5, 4.0, V), jnp.float32)
+    assoc = jnp.asarray(rng.integers(0, K, V))
+    parts, seg_w = agg.aggregate_merged_padded_segmented(
+        fleet, weights, assoc, K, scale=1.5)
+    merged = agg.merge_partials(parts, seg_w, jnp.zeros((K,)), decay=0.42)
+    pooled = agg.aggregate_merged_padded(fleet, weights, scale=1.5)
+    assert np.allclose(np.asarray(merged["q"]["delta"]),
+                       np.asarray(pooled["q"]["delta"]), atol=1e-5)
+
+
+def test_hetlora_segmented_matches_per_subset():
+    import jax
+    V, K, max_rank = 5, 2, 8
+    fleet = _rand_fleet(V, R=4, seed=9)
+    weights = jnp.asarray([1.0, 2.0, 3.0, 0.5, 1.5])
+    assoc = jnp.asarray([0, 1, 0, -1, 1])
+    parts, seg_w = agg.aggregate_hetlora_segmented(
+        fleet, weights, assoc, K, max_rank)
+    for k in range(K):
+        sel = [v for v in range(V) if int(assoc[v]) == k]
+        ref = agg.aggregate_hetlora(
+            [jax.tree_util.tree_map(lambda x: x[v], fleet) for v in sel],
+            [float(weights[v]) for v in sel], max_rank)
+        assert np.allclose(np.asarray(parts["q"]["a"][k]),
+                           np.asarray(ref["q"]["a"]), atol=1e-5)
+        assert np.allclose(np.asarray(parts["q"]["b"][k]),
+                           np.asarray(ref["q"]["b"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Config / server validation
+# ---------------------------------------------------------------------------
+
+def test_rsu_tier_spec_validation():
+    with pytest.raises(ValueError, match="num_rsus_per_task"):
+        RSUTierSpec(num_rsus_per_task=0)
+    with pytest.raises(ValueError, match="sync_period"):
+        RSUTierSpec(sync_period=0)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        RSUTierSpec(staleness_decay=0.0)
+    with pytest.raises(ValueError, match="handoff"):
+        RSUTierSpec(handoff_energy=-1.0)
+    with pytest.raises(ValueError, match="handoff"):
+        RSUTierSpec(handoff_latency=-0.5)
+    assert RSUTierSpec().trivial
+    assert not RSUTierSpec(num_rsus_per_task=2).trivial
+    assert not RSUTierSpec(sync_period=3).trivial
+
+
+def test_server_rejects_unsupported_tier_methods():
+    from repro.federated.server import RSUServer
+    tier = RSUTierSpec(num_rsus_per_task=2)
+    with pytest.raises(ValueError, match="multi-RSU"):
+        RSUServer(_tiny_cfg(), LORA, "fedra", tier=tier)
+    with pytest.raises(ValueError, match="residual"):
+        RSUServer(_tiny_cfg(), LORA, "ours", residual=True, tier=tier)
+    # supported combos construct fine
+    RSUServer(_tiny_cfg(), LORA, "ours", tier=tier)
+    RSUServer(_tiny_cfg(), LORA, "hetlora", tier=tier)
+
+
+def test_server_tier_sync_period_defers_global():
+    """With sync_period=2 the global model appears only at the sync round,
+    built from staleness-weighted partials."""
+    from repro.federated.server import RSUServer
+    import jax
+    tier = RSUTierSpec(num_rsus_per_task=2, sync_period=2,
+                       staleness_decay=0.5)
+    srv = RSUServer(_tiny_cfg(), LORA, "ours", tier=tier)
+    fleet = _rand_fleet(4, seed=11)
+    clients = [jax.tree_util.tree_map(lambda x: x[v], fleet)
+               for v in range(4)]
+    # round 0: uploads to RSU 0 only — no sync yet
+    srv.aggregate(clients[:2], [1.0, 2.0], assoc=[0, 0])
+    assert srv.merged is None
+    assert srv.partial_w[0] == pytest.approx(3.0)
+    assert srv.partial_age[0] == 0
+    # round 1: uploads to RSU 1 — sync round: global = ω-weighted merge
+    srv.aggregate(clients[2:], [1.0, 1.0], assoc=[1, 1])
+    assert srv.merged is not None
+    # the window reset leaves the next sync to fresh uploads only
+    assert srv.partial_w.sum() == 0.0
+    p0 = agg.aggregate_merged(clients[:2], [1.0, 2.0], LORA.scale)
+    p1 = agg.aggregate_merged(clients[2:], [1.0, 1.0], LORA.scale)
+    # ω0 = 3.0·0.5¹ (one round stale), ω1 = 2.0·0.5⁰
+    w0, w1 = 3.0 * 0.5, 2.0
+    ref = (w0 * np.asarray(p0["q"]["delta"])
+           + w1 * np.asarray(p1["q"]["delta"])) / (w0 + w1)
+    assert np.allclose(np.asarray(srv.merged["q"]["delta"]), ref, atol=1e-5)
