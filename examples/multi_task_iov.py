@@ -10,12 +10,25 @@ named mobility regime — trace-driven fleets, RSU layouts, outages:
 
     PYTHONPATH=src python examples/multi_task_iov.py --scenario rush-hour
     PYTHONPATH=src python examples/multi_task_iov.py --list-scenarios
+
+Round engines (README "Engines"): ``--engine`` pins one explicitly —
+including ``fused_sharded``, the device-sharded fleet (force host devices
+with XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU). Without
+the flag the engine resolves from $REPRO_SIM_ENGINE, then "batched":
+
+    PYTHONPATH=src python examples/multi_task_iov.py --engine fused
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/multi_task_iov.py \
+        --engine fused_sharded
 """
 import argparse
 
 from repro.config import EnergyAllocConfig
 from repro.sim import scenarios
 from repro.sim.simulator import IoVSimulator, SimConfig
+
+ENGINES = ("serial", "batched", "batched_check", "fused", "fused_check",
+           "fused_sharded")
 
 
 def main():
@@ -27,6 +40,9 @@ def main():
     ap.add_argument("--budget", type=float, default=900.0,
                     help="global per-round energy budget E_total (J)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default=None, choices=ENGINES,
+                    help="round engine; omitted = $REPRO_SIM_ENGINE, then "
+                         "'batched' (an explicit flag beats the env var)")
     ap.add_argument("--scenario", default=None,
                     help="named preset from repro.sim.scenarios "
                          "(overrides fleet/area/budget defaults)")
@@ -49,6 +65,10 @@ def main():
         if args.budget != ap.get_default("budget"):
             overrides["energy"] = EnergyAllocConfig(e_total=args.budget,
                                                     warmup_q=4)
+        # engine=None stays None in the config, so the simulator still
+        # resolves $REPRO_SIM_ENGINE per run (flag > env var > batched)
+        if args.engine is not None:
+            overrides["engine"] = args.engine
         cfg = scenarios.build_config(args.scenario, method=args.method,
                                      rounds=args.rounds, seed=args.seed,
                                      **overrides)
@@ -59,9 +79,10 @@ def main():
         cfg = SimConfig(
             method=args.method, rounds=args.rounds,
             num_vehicles=args.vehicles, num_tasks=args.tasks,
-            seed=args.seed,
+            seed=args.seed, engine=args.engine,
             energy=EnergyAllocConfig(e_total=args.budget, warmup_q=4))
     sim = IoVSimulator(cfg)
+    print(f"engine: {sim.engine}")
     sim.run(log_every=2)
 
     s = sim.summary()

@@ -331,6 +331,53 @@ class RSUTierSpec:
 
 
 @dataclass(frozen=True)
+class ShardSpec:
+    """Fleet-axis device sharding for the fused round engine (DESIGN.md §3).
+
+    The fused engine's fleet arrays (rank-padded adapters, staged data
+    draws, channel/mobility views, cost vectors) all carry a leading
+    vehicle-lane axis. A non-trivial ShardSpec shards that axis over a
+    1-D device mesh (``repro.launch.mesh.make_fleet_mesh``): each device
+    trains its slice of the fleet inside the ONE jit round program, and
+    the per-RSU segment-sum partial merges are the only cross-device
+    reductions. The fleet is padded to a multiple of the shard count with
+    zero-weight lanes (exact no-ops — the same invariant dynamic fleets
+    rely on), distributed per ``placement``.
+
+    ``num_shards=0`` resolves to every visible device at engine-build
+    time; ``num_shards=1`` (the default) is the trivial spec — the engine
+    takes the pre-sharding code path byte for byte.
+    """
+    num_shards: int = 1          # 0 ⇒ all visible devices
+    axis_name: str = "fleet"
+    # how real lanes map to shards: "roundrobin" deals lane v to shard
+    # v % N (padding spreads evenly, rank groups balance across shards);
+    # "block" keeps lanes contiguous (all padding on the last shard)
+    placement: str = "roundrobin"
+
+    @property
+    def trivial(self) -> bool:
+        return self.num_shards == 1
+
+    def resolve(self) -> int:
+        """Concrete shard count (0 ⇒ every visible device)."""
+        if self.num_shards == 0:
+            import jax
+            return jax.local_device_count()
+        return self.num_shards
+
+    def __post_init__(self):
+        if self.num_shards < 0:
+            raise ValueError("num_shards must be >= 0 (0 = all devices)")
+        if self.placement not in ("roundrobin", "block"):
+            raise ValueError(
+                f"placement must be 'roundrobin' or 'block', "
+                f"not {self.placement!r}")
+        if not self.axis_name:
+            raise ValueError("axis_name must be non-empty")
+
+
+@dataclass(frozen=True)
 class OutageSpec:
     """RSU coverage outage: RSU ``rsu_id`` has zero effective radius for
     round indices ``start <= round < end`` (0-based). Vehicles lose coverage

@@ -268,7 +268,8 @@ def aggregate_fedra_stacked(stacked: Any, weights: Any,
 # ---------------------------------------------------------------------------
 
 def aggregate_merged_padded(stacked: Any, weights: jnp.ndarray,
-                            scale: float) -> Any:
+                            scale: float, *,
+                            constrain: Optional[Any] = None) -> Any:
     """Merged-delta aggregation over a rank-padded fleet-stacked tree.
 
     stacked: adapter tree with a leading (V,) axis, every adapter padded to
@@ -276,7 +277,13 @@ def aggregate_merged_padded(stacked: Any, weights: jnp.ndarray,
     A·B, so this equals :func:`aggregate_merged` over the per-client list).
     weights: (V,) — non-contributing vehicles carry weight 0, which makes
     them exact no-ops in the weighted reduction.
+    constrain: optional sharding-constraint fn (the device-sharded engine
+    passes ``launch.sharding.fleet_constrainer``) pinning the stacked tree
+    to the fleet mesh so the einsum reduces shard-locally and the merged
+    delta materializes through one cross-device all-reduce.
     """
+    if constrain is not None:
+        stacked = constrain(stacked)
     w = jnp.asarray(weights, jnp.float32)
     wn = w / jnp.maximum(jnp.sum(w), 1e-12)
     paths = tree_paths(_skeleton(stacked))
@@ -440,7 +447,8 @@ def segment_weight_matrix(assoc, weights, num_segments: int
 
 
 def aggregate_merged_padded_segmented(stacked: Any, weights, assoc,
-                                      num_segments: int, scale: float
+                                      num_segments: int, scale: float, *,
+                                      constrain: Optional[Any] = None
                                       ) -> Tuple[Any, jnp.ndarray]:
     """Per-RSU merged-delta partials via segment-sum over the rank-padded
     fleet tree (the fused engine's hierarchy step — one einsum per target,
@@ -451,7 +459,13 @@ def aggregate_merged_padded_segmented(stacked: Any, weights, assoc,
     :func:`aggregate_merged` over the vehicles associated to segment k —
     and seg_w is the (K,) raw weight sum per segment (0 ⇒ the slot is a
     zero tree and the caller keeps its previous partial).
+    constrain: optional fleet-mesh sharding constraint (see
+    :func:`aggregate_merged_padded`) — the association one-hot contraction
+    then runs as shard-local partial segment-sums merged by one
+    all-reduce, the sharded engine's only cross-device collective.
     """
+    if constrain is not None:
+        stacked = constrain(stacked)
     wn_vk, seg_w = segment_weight_matrix(assoc, weights, num_segments)
     paths = tree_paths(_skeleton(stacked))
     out = _skeleton(stacked)
@@ -465,15 +479,19 @@ def aggregate_merged_padded_segmented(stacked: Any, weights, assoc,
 
 
 def aggregate_hetlora_segmented(stacked: Any, weights, assoc,
-                                num_segments: int, max_rank: int
+                                num_segments: int, max_rank: int, *,
+                                constrain: Optional[Any] = None
                                 ) -> Tuple[Any, jnp.ndarray]:
     """Per-RSU HetLoRA partials: zero-pad to max_rank, factor-wise
     segment-sum. stacked: fleet tree with a leading (V,) axis whose
     adapters share one rank r ≤ max_rank (a rank group, or the rank-padded
     fleet). Returns a factor tree with a leading (K,) axis + (K,) raw
     segment weights; slot k equals :func:`aggregate_hetlora` over segment
-    k's vehicles.
+    k's vehicles. constrain: optional fleet-mesh sharding constraint (see
+    :func:`aggregate_merged_padded`).
     """
+    if constrain is not None:
+        stacked = constrain(stacked)
     wn_vk, seg_w = segment_weight_matrix(assoc, weights, num_segments)
     paths = tree_paths(_skeleton(stacked))
     out = _skeleton(stacked)

@@ -57,6 +57,24 @@ RSU outages) reuse the exact-no-op padding invariants unchanged: no shape
 in the program depends on who is present, and serial/fused parity holds in
 churning-fleet regimes (tests/test_scenarios.py).
 
+Device-sharded fleets (ISSUE 5): with ``engine="fused_sharded"`` (or a
+non-trivial ``SimConfig.shard``) the SAME round program runs with its
+fleet axis sharded over a 1-D device mesh (``launch.mesh.make_fleet_mesh``)
+under the ``launch.sharding`` fleet rules. The fleet is padded to a
+multiple of the shard count with zero-weight lanes — the exact-no-op
+padding invariant dynamic fleets already rely on — and real lanes are
+dealt round-robin across shards (:func:`fleet_slots`), so every shard
+carries an equal slice of live vehicles and rank mix. Each device trains
+its lane slice of the vmap×scan megastep; the merged-delta / per-RSU
+segment-sum reductions are the only cross-device collectives (one
+all-reduce per target), and the program still compiles exactly once per
+device topology. Parity contract: the sharded engine reproduces the
+single-device fused engine's ranks/energy/handoffs to float-reassociation
+tolerance (the lane permutation and per-shard partial sums reassociate
+the weighted reductions; every per-lane computation is elementwise
+identical) — regression-tested in tests/test_sharded_engine.py under a
+forced multi-device CPU host.
+
 Supported methods: the adaptive-rank "ours" family (ours, ours_no_energy,
 ours_no_mobility). Baselines keep the batched/serial engines.
 """
@@ -68,6 +86,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import cost_model as cm
@@ -87,6 +106,30 @@ def supports_method(method: str) -> bool:
     return method in FUSED_METHODS
 
 
+def fleet_slots(num_vehicles: int, num_shards: int,
+                placement: str = "roundrobin") -> Tuple[np.ndarray, int]:
+    """Lane → slot map for the (padded) device-sharded fleet.
+
+    Pads the fleet to ``Vp = ceil(V / N) · N`` lanes and returns
+    ``(slot, Vp)`` where ``slot[v]`` is the padded-fleet position of real
+    lane v. The mesh shards the slot axis in N contiguous blocks of
+    ``Vp / N``; "block" placement keeps lanes in order (all padding lands
+    on the last shard), "roundrobin" deals lane v to shard ``v % N`` so
+    real lanes — and with them the round's rank-group mix — balance across
+    shards and the padding spreads one lane at a time.
+    """
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    vp = -(-num_vehicles // num_shards) * num_shards
+    v = np.arange(num_vehicles)
+    if placement == "block":
+        return v, vp
+    if placement != "roundrobin":
+        raise ValueError(f"unknown placement {placement!r}")
+    per_shard = vp // num_shards
+    return (v % num_shards) * per_shard + v // num_shards, vp
+
+
 class FusedRoundEngine:
     """One-jit-program-per-round engine bound to an :class:`IoVSimulator`.
 
@@ -96,7 +139,7 @@ class FusedRoundEngine:
     ``server.eval_adapters``) stay coherent.
     """
 
-    def __init__(self, sim, check: bool = False):
+    def __init__(self, sim, check: bool = False, sharded: bool = False):
         cfg = sim.cfg
         if not supports_method(cfg.method):
             raise ValueError(
@@ -110,6 +153,45 @@ class FusedRoundEngine:
         self.lora = cfg.lora
         self.V = cfg.num_vehicles
         self.T = cfg.num_tasks
+        # ---- fleet-axis device sharding (ShardSpec / engine="fused_sharded")
+        # The trivial topology (1 shard) takes the pre-sharding code path:
+        # slot == arange, Vp == V, no mesh, every constraint fn an identity
+        # — the traced round program is byte-identical to the unsharded one.
+        from repro.launch import sharding as sh_rules
+        shard_spec = cfg.shard
+        self.shard_spec = shard_spec
+        if self.check:
+            if sharded:
+                raise ValueError(
+                    "fused_check replays lanes in original order on the "
+                    "host; run the check engine unsharded")
+            # an explicit fused_check + explicit shard combo is rejected
+            # at engine resolution; an env-resolved check engine treats
+            # the spec as inert (trivial topology), like batched/serial
+            self.n_shards = 1
+        elif not shard_spec.trivial:
+            self.n_shards = shard_spec.resolve()
+        elif sharded:   # engine="fused_sharded" + default spec: all devices
+            self.n_shards = jax.local_device_count()
+            if self.n_shards < 2:
+                raise ValueError(
+                    "engine='fused_sharded' needs >1 visible device but "
+                    "found 1 — on CPU export XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N BEFORE "
+                    "python starts, or use engine='fused' (a silent "
+                    "single-device run would masquerade as sharded)")
+        else:
+            self.n_shards = 1
+        self.slot, self.Vp = fleet_slots(self.V, self.n_shards,
+                                         shard_spec.placement)
+        if self.n_shards > 1:
+            from repro.launch.mesh import make_fleet_mesh
+            self.mesh = make_fleet_mesh(self.n_shards,
+                                        axis_name=shard_spec.axis_name)
+        else:
+            self.mesh = None
+        self._constrain = sh_rules.fleet_constrainer(
+            self.mesh, self.Vp, axis_name=shard_spec.axis_name)
         # two-tier RSU hierarchy: per-RSU partial aggregation + periodic
         # staleness-weighted sync. The trivial tier keeps the pre-hierarchy
         # round program byte-for-byte (static branch at trace time).
@@ -148,15 +230,18 @@ class FusedRoundEngine:
             [sim.g_cache[int(r)] for r in cand], jnp.float32)
 
         # ---- fleet device profiles (κ·f³ folded on host in f64 — the cube
-        # of a >1e12 FLOP/s frequency overflows f32) ----
-        self.freq = jnp.asarray([p.freq for p in sim.dev_profiles],
-                                jnp.float32)
-        self.comp_power = jnp.asarray(
-            [p.kappa * p.freq ** 3 for p in sim.dev_profiles], jnp.float32)
-        self.dev_tx = jnp.asarray([p.tx_power for p in sim.dev_profiles],
-                                  jnp.float32)
-        self.flops_ps = jnp.asarray(
-            [p.flops_per_sample for p in sim.dev_profiles], jnp.float32)
+        # of a >1e12 FLOP/s frequency overflows f32). Padding lanes copy
+        # lane 0's profile: any FINITE value works (padding never has
+        # `active` set, so its costs are masked out of every reduction),
+        # but a zero frequency would put inf·0 = nan into the cost vectors.
+        self.freq = self._pad_lanes(
+            [p.freq for p in sim.dev_profiles])
+        self.comp_power = self._pad_lanes(
+            [p.kappa * p.freq ** 3 for p in sim.dev_profiles])
+        self.dev_tx = self._pad_lanes(
+            [p.tx_power for p in sim.dev_profiles])
+        self.flops_ps = self._pad_lanes(
+            [p.flops_per_sample for p in sim.dev_profiles])
         rsu = sim.rsu_profile
         self.rsu_tx = float(rsu.tx_power)
         self.agg_tau_pv = float(rsu.agg_flops_per_vehicle / rsu.freq)
@@ -170,10 +255,13 @@ class FusedRoundEngine:
         self.ns_dep = int(cfg.batch_size * cfg.local_steps
                           * cfg.departure_fraction)
 
-        # data-size aggregation weights (T, V)
-        self.weights = jnp.asarray(
-            [[float(len(sim.client_data[t][v])) for v in range(self.V)]
-             for t in range(self.T)], jnp.float32)
+        # data-size aggregation weights (T, Vp) in slot order; padding
+        # lanes carry weight 0 — exact no-ops in every reduction
+        w_host = np.zeros((self.T, self.Vp), np.float32)
+        w_host[:, self.slot] = [
+            [float(len(sim.client_data[t][v])) for v in range(self.V)]
+            for t in range(self.T)]
+        self.weights = jnp.asarray(w_host)
 
         # fixed eval batches, device-resident once
         self.local_eval = [{k: jnp.asarray(v) for k, v in b.items()}
@@ -186,11 +274,24 @@ class FusedRoundEngine:
                                cfg.lora, rank=self.Rmax)
         self._zero_merged = self._merged_zeros_like(tmpl)
         self._zero_fleet = jax.tree_util.tree_map(
-            lambda x: jnp.zeros((self.V,) + x.shape, x.dtype), tmpl)
+            lambda x: jnp.zeros((self.Vp,) + x.shape, x.dtype), tmpl)
         # per-task RSU partials: merged-delta tree with a leading (K,) axis
         self._zero_partials = jax.tree_util.tree_map(
             lambda x: jnp.zeros((self.K,) + x.shape, x.dtype),
             self._zero_merged)
+        if self.mesh is not None:
+            # the fleet template lives sharded on the mesh, so everything
+            # scattered into it (fresh staging) inherits the placement;
+            # the frozen base params replicate once, up front
+            self._zero_fleet = jax.device_put(
+                self._zero_fleet, sh_rules.fleet_shardings(
+                    self.mesh, self._zero_fleet, fleet_size=self.Vp,
+                    axis_name=shard_spec.axis_name))
+            self._params = jax.device_put(
+                sim.params, jax.tree_util.tree_map(
+                    lambda _: NamedSharding(self.mesh, P()), sim.params))
+        else:
+            self._params = sim.params
 
         self._carry = None
         self._has_merged_host = [False] * self.T
@@ -210,11 +311,100 @@ class FusedRoundEngine:
         return out
 
     # ------------------------------------------------------------------
+    # Fleet padding / device placement (device-sharded topologies)
+    # ------------------------------------------------------------------
+    def _pad_lanes(self, values) -> jnp.ndarray:
+        """(V,) per-vehicle host values → (Vp,) f32 table in slot order.
+        Padding slots copy lane 0 (finite; masked out of every reduction
+        by the `active` mask)."""
+        arr = np.asarray(values, np.float64)
+        out = np.full((self.Vp,), arr[0], np.float64)
+        out[self.slot] = arr
+        return jnp.asarray(out.astype(np.float32))
+
+    def _replicate(self, tree):
+        """Pin a tree replicated on the fleet mesh (identity unsharded).
+        Applied to the carry's global state (merged deltas, RSU partials,
+        allocator) so the round program's output shardings are a fixed
+        point of its input shardings — one compile per topology."""
+        if self.mesh is None:
+            return tree
+        s = NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, s), tree)
+
+    def _place_x(self, x: Dict[str, Any], lead: int = 0) -> Dict[str, Any]:
+        """Ship staged host arrays onto the fleet mesh: every array whose
+        vehicle-lane dimension is present shards it, the rest replicate.
+        lead=1 for `run_scanned` stacks (a scan axis precedes the usual
+        layout). Identity on the trivial topology."""
+        if self.mesh is None:
+            return x
+        from repro.launch import sharding as sh_rules
+        an = self.shard_spec.axis_name
+        out = dict(x)
+        main = {k: v for k, v in x.items()
+                if k not in ("tokens", "labels", "fresh")}
+        main = jax.device_put(main, sh_rules.fleet_shardings(
+            self.mesh, main, axis_pos=1 + lead, axis_name=an,
+            fleet_size=self.Vp))
+        out.update(main)
+        for k in ("tokens", "labels", "fresh"):
+            if k in x:
+                out[k] = jax.device_put(x[k], sh_rules.fleet_shardings(
+                    self.mesh, x[k], axis_pos=lead, axis_name=an,
+                    fleet_size=self.Vp))
+        return out
+
+    def _place_carry(self, carry: Dict[str, Any]) -> Dict[str, Any]:
+        """Initial carry placement: per-vehicle UCB statistics shard over
+        the fleet axis, all global state replicates. After round 1 the
+        in-program constraints keep the layout a fixed point."""
+        if self.mesh is None:
+            return carry
+        an = self.shard_spec.axis_name
+        fleet = NamedSharding(self.mesh, P(an, None))
+        repl = NamedSharding(self.mesh, P())
+
+        def put_repl(tree):
+            return jax.device_put(tree, jax.tree_util.tree_map(
+                lambda _: repl, tree))
+
+        out = dict(carry)
+        out["ucb"] = [ucb_dual.UCBDualState(
+            counts=jax.device_put(s.counts, fleet),
+            reward_sum=jax.device_put(s.reward_sum, fleet),
+            energy_sum=jax.device_put(s.energy_sum, fleet),
+            lam=jax.device_put(s.lam, repl),
+            round=jax.device_put(s.round, repl)) for s in carry["ucb"]]
+        for k in ("merged", "has_merged", "alloc", "round", "partials",
+                  "partial_w", "partial_age"):
+            if k in out:
+                out[k] = put_repl(out[k])
+        return out
+
+    def _pad_ucb(self, state) -> ucb_dual.UCBDualState:
+        """Adopt a (V, K) host UCB state into the (Vp, K) slot layout.
+        Padding rows are zeros == fresh ``init_state`` rows; they never
+        activate, so they never accrue counts."""
+        if self.Vp == self.V and self.n_shards == 1:
+            return ucb_dual.UCBDualState(*map(jnp.asarray, state))
+
+        def pad(a):
+            a = np.asarray(a, np.float32)
+            out = np.zeros((self.Vp,) + a.shape[1:], np.float32)
+            out[self.slot] = a
+            return jnp.asarray(out)
+        return ucb_dual.UCBDualState(
+            counts=pad(state.counts), reward_sum=pad(state.reward_sum),
+            energy_sum=pad(state.energy_sum),
+            lam=jnp.asarray(state.lam), round=jnp.asarray(state.round))
+
+    # ------------------------------------------------------------------
     def _init_carry(self):
         sim = self.sim
         self._carry = {
-            "ucb": [ucb_dual.UCBDualState(*map(jnp.asarray, s))
-                    for s in sim.ucb_states],
+            "ucb": [self._pad_ucb(s) for s in sim.ucb_states],
             "merged": [self._zero_merged for _ in range(self.T)],
             "has_merged": jnp.zeros((self.T,), bool),
             "alloc": AllocState(
@@ -245,6 +435,7 @@ class FusedRoundEngine:
             self._carry["partials"] = parts
             self._carry["partial_w"] = jnp.asarray(np.stack(pw))
             self._carry["partial_age"] = jnp.asarray(np.stack(page))
+        self._carry = self._place_carry(self._carry)
 
     # ------------------------------------------------------------------
     # Host staging: consume the serial engine's RNG streams, same order
@@ -262,14 +453,19 @@ class FusedRoundEngine:
         sim = self.sim
         cfg = self.cfg
         sim.mobility.step()
-        active = np.zeros((self.T, self.V), bool)
-        departing = np.zeros((self.T, self.V), bool)
-        handoff = np.zeros((self.T, self.V), bool)
-        assoc = np.full((self.T, self.V), -1, np.int32)
+        # staged arrays live in SLOT order at the padded fleet width Vp;
+        # the host loop below works in original lane order (the RNG
+        # contract) and scatters through self.slot. Trivial topology:
+        # slot == arange(V), Vp == V — the scatter is the identity.
+        slot = self.slot
+        active = np.zeros((self.T, self.Vp), bool)
+        departing = np.zeros((self.T, self.Vp), bool)
+        handoff = np.zeros((self.T, self.Vp), bool)
+        assoc = np.full((self.T, self.Vp), -1, np.int32)
         peer = np.zeros((self.T,), bool)
-        rate_d = np.zeros((self.T, self.V), np.float64)
-        rate_u = np.zeros((self.T, self.V), np.float64)
-        counts = np.zeros((self.T, self.V), np.int32)
+        rate_d = np.zeros((self.T, self.Vp), np.float64)
+        rate_u = np.zeros((self.T, self.Vp), np.float64)
+        counts = np.zeros((self.T, self.Vp), np.int32)
         tokens: List[np.ndarray] = []
         labels: List[np.ndarray] = []
         fresh: List[Any] = []
@@ -277,38 +473,39 @@ class FusedRoundEngine:
         for t in range(self.T):
             view = sim.mobility.round_view_group(sim.rsu_groups[t])
             act, dep = view["active"], view["departing"]
-            active[t], departing[t] = act, dep
-            handoff[t] = view["handoff"]
-            assoc[t] = view["assoc"]
+            active[t, slot], departing[t, slot] = act, dep
+            handoff[t, slot] = view["handoff"]
+            assoc[t, slot] = view["assoc"]
             peer[t] = view["peer_available"]
             ids = np.where(act)[0]
-            rate_d[t], rate_u[t] = sim.channel.round_rates(
+            rate_d[t, slot], rate_u[t, slot] = sim.channel.round_rates(
                 self.rsu_tx, dev_tx, view["distances"], sim.shadow, ids)
-            counts[t] = np.where(act, np.where(dep, self.steps_dep,
-                                               self.steps_full), 0)
+            cnt = np.where(act, np.where(dep, self.steps_dep,
+                                         self.steps_full), 0)
+            counts[t, slot] = cnt
             tok = None
             lab = None
             for v in ids:
-                b = draw_batches(sim.client_data[t][v], int(counts[t, v]),
+                b = draw_batches(sim.client_data[t][v], int(cnt[v]),
                                  self.steps_full)
                 if tok is None:
-                    tok = np.zeros((self.V,) + b["tokens"].shape, np.int32)
-                    lab = np.zeros((self.V,) + b["labels"].shape, np.int32)
-                tok[v] = b["tokens"]
-                lab[v] = b["labels"]
+                    tok = np.zeros((self.Vp,) + b["tokens"].shape, np.int32)
+                    lab = np.zeros((self.Vp,) + b["labels"].shape, np.int32)
+                tok[slot[v]] = b["tokens"]
+                lab[slot[v]] = b["labels"]
             if tok is None:   # no coverage this round: shape from eval set
                 S = sim.task_data[t]["tokens"].shape[-1]
-                tok = np.zeros((self.V, self.steps_full, cfg.batch_size, S),
+                tok = np.zeros((self.Vp, self.steps_full, cfg.batch_size, S),
                                np.int32)
-                lab = np.zeros((self.V, self.steps_full, cfg.batch_size),
+                lab = np.zeros((self.Vp, self.steps_full, cfg.batch_size),
                                np.int32)
             tokens.append(tok)
             labels.append(lab)
             if allow_fresh[t] and len(ids):
-                draws = sim.servers[t].fresh_padded(len(ids))
-                idx = jnp.asarray(ids, jnp.int32)
-                fresh.append(jax.tree_util.tree_map(
-                    lambda z, d: z.at[idx].set(d), self._zero_fleet, draws))
+                # the server scatters the draws into the fleet template so
+                # the result inherits its (possibly mesh-sharded) placement
+                fresh.append(sim.servers[t].fresh_padded(
+                    len(ids), fleet=self._zero_fleet, slots=slot[ids]))
             else:
                 fresh.append(self._zero_fleet)
         x = {"active": active, "departing": departing, "peer": peer,
@@ -409,11 +606,15 @@ class FusedRoundEngine:
 
             dist = jax.lax.cond(carry["has_merged"][ti], dist_svd,
                                 dist_fresh, carry["merged"][ti])
+            # sharded topologies: pin the distributed fleet tree and the
+            # trained result to the fleet mesh so the vmap megastep stays
+            # lane-parallel (identity on the trivial topology)
+            dist = self._constrain(dist)
 
             # 3. fleet megastep: local fine-tuning + held-out local eval
-            new_ads = self._train_fleet(params, dist, scale_v,
-                                        x["tokens"][ti], x["labels"][ti],
-                                        x["counts"][ti])
+            new_ads = self._constrain(self._train_fleet(
+                params, dist, scale_v, x["tokens"][ti], x["labels"][ti],
+                x["counts"][ti]))
             local_acc = self._eval_fleet(params, new_ads, scale_v,
                                          self.local_eval[ti])
 
@@ -450,7 +651,7 @@ class FusedRoundEngine:
                              axis=0)
             else:
                 contribute = act & ~dep
-                extra_e = extra_tau = jnp.zeros((self.V,), jnp.float32)
+                extra_e = extra_tau = jnp.zeros((self.Vp,), jnp.float32)
                 fb = jnp.zeros((3,), jnp.int32)
 
             hoff = act & x["handoff"][ti]
@@ -479,26 +680,29 @@ class FusedRoundEngine:
             #    sync_period rounds — all inside this same jit program.
             w = jnp.where(contribute, self.weights[ti], 0.0)
             keep = n_kept > 0
+            # self._constrain is the identity on the trivial topology, so
+            # passing it unconditionally keeps one code path
             if self.tier_trivial:
-                merged_new = agg.aggregate_merged_padded(new_ads, w, self.S0)
-                merged_out = jax.tree_util.tree_map(
+                merged_new = agg.aggregate_merged_padded(
+                    new_ads, w, self.S0, constrain=self._constrain)
+                merged_out = self._replicate(jax.tree_util.tree_map(
                     lambda n, o: jnp.where(keep, n, o), merged_new,
-                    carry["merged"][ti])
+                    carry["merged"][ti]))
                 has_m = carry["has_merged"][ti] | keep
             else:
                 # uploads carry the RSU association of the vehicle that
                 # produced them (assoc == -1 lanes have weight 0 already)
                 part_new, seg_w = agg.aggregate_merged_padded_segmented(
                     new_ads, w, jnp.where(contribute, x["assoc"][ti], -1),
-                    self.K, self.S0)
+                    self.K, self.S0, constrain=self._constrain)
                 refreshed = seg_w > 0                       # (K,)
 
                 def upd(n, o):
                     r = refreshed.reshape((self.K,) + (1,) * (n.ndim - 1))
                     return jnp.where(r, n, o)
 
-                parts_out = jax.tree_util.tree_map(
-                    upd, part_new, carry["partials"][ti])
+                parts_out = self._replicate(jax.tree_util.tree_map(
+                    upd, part_new, carry["partials"][ti]))
                 pw_old = carry["partial_w"][ti]
                 page_old = carry["partial_age"][ti]
                 pw = jnp.where(refreshed, seg_w, pw_old)
@@ -511,9 +715,9 @@ class FusedRoundEngine:
                 candidate = agg.merge_partials(
                     parts_out, pw, page, self.tier.staleness_decay)
                 do_merge = is_sync & (jnp.sum(omega) > 0)
-                merged_out = jax.tree_util.tree_map(
+                merged_out = self._replicate(jax.tree_util.tree_map(
                     lambda n, o: jnp.where(do_merge, n, o), candidate,
-                    carry["merged"][ti])
+                    carry["merged"][ti]))
                 has_m = carry["has_merged"][ti] | do_merge
                 # a synced window resets: only new uploads count next time
                 new_partials.append(parts_out)
@@ -543,6 +747,10 @@ class FusedRoundEngine:
             state_new, info = ucb_dual.update(
                 state, ucb_cfg, arms, per_v_reward, per_v_energy,
                 budgets[ti].astype(jnp.float32))
+            # per-vehicle bandit statistics stay fleet-sharded round over
+            # round (their (Vp, K) leaves hit the fleet rule; the scalar
+            # dual state is untouched)
+            state_new = self._constrain(state_new)
 
             tau_agg = self.agg_tau_pv * n_kept
             e_agg = self.agg_e_pv * n_kept
@@ -620,7 +828,8 @@ class FusedRoundEngine:
             self._init_carry()
         x, fresh = self._stage_round(
             [not hm for hm in self._has_merged_host])
-        data = {"params": self.sim.params, "fresh": fresh}
+        x = self._place_x(x)
+        data = {"params": self._params, "fresh": fresh}
         self._carry, rec = self._jit_round(self._carry, x, data)
         if self.check:
             self._run_check(x, rec.pop("check"))
@@ -700,12 +909,13 @@ class FusedRoundEngine:
                 lambda *leaves: jnp.stack(leaves),
                 *[fresh_list[r][t] for r in range(rounds)])
                 for t in range(self.T) if staged_fresh[t]]
+        xs = self._place_x(xs, lead=1)
         if self.tier_trivial:
-            data = {"params": self.sim.params, "fresh": fresh_const,
+            data = {"params": self._params, "fresh": fresh_const,
                     "fresh_round": jnp.asarray(fresh_round, jnp.int32)}
         else:
             # the hierarchy body reads only params — fresh rides in xs
-            data = {"params": self.sim.params}
+            data = {"params": self._params}
         fn = self._scan_fn(rounds, staged_fresh)
         self._carry, recs = fn(self._carry, xs, data)
         host = jax.device_get(recs)
@@ -798,7 +1008,17 @@ class FusedRoundEngine:
         consumers (checkpointing, eval_adapters, summary) stay coherent."""
         sim = self.sim
         c = self._carry
-        sim.ucb_states = list(c["ucb"])
+        if self.n_shards == 1:
+            sim.ucb_states = list(c["ucb"])
+        else:
+            # un-permute the (Vp, K) slot layout back to original lanes so
+            # host consumers (checkpointing, engine switches) see the same
+            # per-vehicle state an unsharded engine would hand them
+            idx = jnp.asarray(self.slot, jnp.int32)
+            sim.ucb_states = [ucb_dual.UCBDualState(
+                counts=s.counts[idx], reward_sum=s.reward_sum[idx],
+                energy_sum=s.energy_sum[idx], lam=s.lam, round=s.round)
+                for s in c["ucb"]]
         sim.alloc = AllocState(budgets=c["alloc"].budgets,
                                difficulty=c["alloc"].difficulty,
                                round=int(c["alloc"].round))

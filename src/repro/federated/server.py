@@ -86,16 +86,30 @@ class RSUServer:
             return full
         return agg.hetlora_truncate(full, rank)
 
-    def fresh_padded(self, n: int):
+    def fresh_padded(self, n: int, *, fleet: Optional[Any] = None,
+                     slots: Optional[Sequence[int]] = None):
         """Consume the key stream exactly as `n` :meth:`_fresh` calls would
         and return the n max_rank draws as one fleet-stacked tree (fused
-        engine round-0 staging; the engine rank-masks it in-program)."""
+        engine round-0 staging; the engine rank-masks it in-program).
+
+        fleet/slots: optional fleet-sized zero template and the lane slots
+        the n draws land in. The scatter happens here so the result
+        inherits the template's placement — for the device-sharded engine
+        the template is a fleet-mesh-sharded tree and the staged draws
+        come back already distributed (DESIGN.md §3)."""
         trees = []
         for _ in range(n):
             self.key, k = jax.random.split(self.key)
             trees.append(T.init_adapters(k, self.cfg, self.lora,
                                          rank=self.lora.max_rank))
-        return agg_stack(trees) if trees else None
+        stacked = agg_stack(trees) if trees else None
+        if fleet is None:
+            return stacked
+        if stacked is None:
+            return fleet
+        idx = jnp.asarray(np.asarray(slots), jnp.int32)
+        return jax.tree_util.tree_map(
+            lambda z, d: z.at[idx].set(d), fleet, stacked)
 
     def load_merged(self, merged, round_: int) -> None:
         """Adopt server state computed off-host (the fused engine's carry),

@@ -20,6 +20,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(num_shards: int = 0, *, axis_name: str = "fleet"):
+    """1-D device mesh over the IoV fleet axis (DESIGN.md §3).
+
+    The fused round engine shards every fleet-stacked array's vehicle-lane
+    axis over `axis_name`; model params, merged deltas and per-task scalars
+    replicate. `num_shards=0` uses every visible device. Distinct from the
+    production (data, model) mesh above: federation clients are the data
+    parallelism here, and there is no tensor parallelism inside one
+    vehicle's reduced backbone.
+    """
+    n = num_shards or jax.local_device_count()
+    if n > jax.local_device_count():
+        raise ValueError(
+            f"fleet mesh wants {n} devices but only "
+            f"{jax.local_device_count()} are visible (CI forces host "
+            "devices via XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh((n,), (axis_name,))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     """Axes that shard the batch dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -151,6 +151,70 @@ def tree_shardings(mesh: Mesh, tree: Any, *, is_adapter: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Fleet-axis rules (fused IoV round engine — DESIGN.md §3)
+#
+# The fused engine's arrays carry the vehicle-lane axis at a known position:
+# axis 0 for fleet-stacked adapter/optimizer trees and per-vehicle tables,
+# axis 1 for (T, V) per-task views, deeper when a scan axis is prepended.
+# Everything else (model params, merged deltas, per-task scalars) replicates.
+# ---------------------------------------------------------------------------
+
+def fleet_spec(ndim: int, *, axis_pos: int = 0,
+               axis_name: str = "fleet") -> P:
+    """PartitionSpec sharding dimension `axis_pos` over the fleet axis."""
+    return P(*(axis_name if i == axis_pos else None for i in range(ndim)))
+
+
+def fleet_shardings(mesh: Mesh, tree: Any, *, axis_pos: int = 0,
+                    axis_name: str = "fleet", fleet_size: Optional[int] = None):
+    """NamedSharding pytree for fleet-stacked arrays.
+
+    A leaf shards dimension `axis_pos` over `axis_name` when that dimension
+    exists, divides the mesh axis evenly, and (if `fleet_size` is given)
+    actually IS the fleet axis — leaves whose `axis_pos` dimension differs
+    from `fleet_size` replicate, so per-task scalars riding in the same tree
+    stay whole.
+    """
+    n = mesh.shape[axis_name]
+
+    def f(leaf):
+        shape = getattr(leaf, "shape", ())
+        if (len(shape) <= axis_pos or shape[axis_pos] % n != 0
+                or (fleet_size is not None
+                    and shape[axis_pos] != fleet_size)):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, fleet_spec(len(shape), axis_pos=axis_pos,
+                                              axis_name=axis_name))
+    return jax.tree_util.tree_map(f, tree)
+
+
+def fleet_constrainer(mesh: Optional[Mesh], fleet_size: int, *,
+                      axis_name: str = "fleet") -> Callable[[Any], Any]:
+    """Constraint fn pinning fleet-stacked intermediates to the fleet mesh.
+
+    Returns identity when `mesh` is None (the unsharded engine's program
+    must stay byte-identical). Otherwise every leaf whose leading dimension
+    equals `fleet_size` gets `with_sharding_constraint(P(axis_name, ...))` —
+    applied by the fused engine to the distributed adapters, the trained
+    fleet tree and the per-vehicle UCB state so GSPMD keeps the megastep
+    lane-parallel instead of gathering the fleet onto one device.
+    """
+    if mesh is None:
+        return lambda tree: tree
+
+    def constrain(tree):
+        def f(x):
+            shape = getattr(x, "shape", ())
+            if not shape or shape[0] != fleet_size:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, fleet_spec(len(shape),
+                                                  axis_name=axis_name)))
+        return jax.tree_util.tree_map(f, tree)
+    return constrain
+
+
+# ---------------------------------------------------------------------------
 # batch / cache / activation specs
 # ---------------------------------------------------------------------------
 

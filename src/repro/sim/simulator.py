@@ -31,7 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (EnergyAllocConfig, LoRAConfig, MobilityConfig,
-                          ModelConfig, RSUTierSpec, UCBDualConfig, get_arch)
+                          ModelConfig, RSUTierSpec, ShardSpec, UCBDualConfig,
+                          get_arch)
 from repro.core import cost_model as cm
 from repro.core import energy_alloc, mobility as mob
 from repro.core import ucb_dual
@@ -76,6 +77,10 @@ class SimConfig:
     # round engine:
     #   "fused"   — ONE jit program per round over the whole rank-padded
     #               fleet (federated.fused_engine; "ours"-family methods);
+    #   "fused_sharded" — the fused program with its fleet axis sharded
+    #               over a 1-D device mesh (see `shard` below; DESIGN.md
+    #               §3). With the default trivial ShardSpec it uses every
+    #               visible device;
     #   "batched" — one vmap×scan jit call per (task, rank) group plus
     #               grouped aggregation;
     #   "serial"  — the per-vehicle reference loop;
@@ -86,6 +91,10 @@ class SimConfig:
     # resolved auto choice falls back from fused to batched for methods the
     # fused engine does not cover (an EXPLICIT engine="fused" raises).
     engine: Optional[str] = None
+    # fleet-axis device sharding (repro.config.ShardSpec). A non-trivial
+    # spec shards the fused engine even under engine="fused"; the trivial
+    # default keeps the single-device program byte-for-byte.
+    shard: ShardSpec = field(default_factory=ShardSpec)
     # bookkeeping label set by repro.sim.scenarios.build_config; the actual
     # scenario recipe (trace, RSU layout, outages) lives in mobility_sim
     scenario: Optional[str] = None
@@ -198,27 +207,44 @@ class IoVSimulator:
 
         # --- fused engine (one jit program per round; see fused_engine) ---
         self.fused = None
-        if self.engine in ("fused", "fused_check"):
+        if self.engine in ("fused", "fused_check", "fused_sharded"):
             from repro.federated.fused_engine import FusedRoundEngine
             self.fused = FusedRoundEngine(
-                self, check=(self.engine == "fused_check"))
+                self, check=(self.engine == "fused_check"),
+                sharded=(self.engine == "fused_sharded"))
 
     # ------------------------------------------------------------------
     @staticmethod
     def _resolve_engine(cfg: SimConfig) -> str:
         from repro.federated.fused_engine import supports_method
-        engine = cfg.engine or os.environ.get("REPRO_SIM_ENGINE", "batched")
+        env = os.environ.get("REPRO_SIM_ENGINE")
+        engine = cfg.engine or env or "batched"
         known = ("serial", "batched", "batched_check", "fused",
-                 "fused_check")
+                 "fused_check", "fused_sharded")
         if engine not in known:
             raise ValueError(f"unknown engine {engine!r}; have {known}")
-        if (engine in ("fused", "fused_check")
+        if (engine in ("fused", "fused_check", "fused_sharded")
                 and not supports_method(cfg.method)):
             if cfg.engine is None:   # auto (env) choice: fall back
                 return "batched"
             raise ValueError(
                 f"engine={engine!r} does not support method "
                 f"{cfg.method!r}; use engine='batched' or 'serial'")
+        if (not cfg.shard.trivial
+                and engine not in ("fused", "fused_sharded")):
+            if cfg.engine is not None:
+                # an explicitly chosen non-fused engine would silently
+                # ignore an explicitly requested fleet sharding; refuse
+                raise ValueError(
+                    f"engine={engine!r} cannot shard the fleet axis; "
+                    f"SimConfig.shard={cfg.shard} needs engine='fused' "
+                    "or 'fused_sharded' (or the trivial ShardSpec)")
+            if env is None and supports_method(cfg.method):
+                # nothing chose an engine: honor the explicit shard
+                # request instead of silently dropping it on the default
+                return "fused"
+            # env-resolved engines keep working (the CI engine matrix
+            # must not trip over sharded configs); the spec stays inert
         return engine
 
     # ------------------------------------------------------------------
