@@ -53,7 +53,12 @@ def run_worker(devices: int, shards: int, vehicles: int, tasks: int,
     """One (topology, fleet) cell in a fresh subprocess with the forced
     device count baked into XLA_FLAGS before jax init."""
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    # replace only the device-count flag; any other XLA_FLAGS the caller
+    # exported keep applying to the workers
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
     env.setdefault("JAX_PLATFORMS", "cpu")
     with tempfile.NamedTemporaryFile("r", suffix=".json") as out:
         cmd = [sys.executable, "-m", "benchmarks.sharded_fleet", "--worker",

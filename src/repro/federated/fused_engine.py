@@ -173,15 +173,17 @@ class FusedRoundEngine:
             self.n_shards = shard_spec.resolve()
         elif sharded:   # engine="fused_sharded" + default spec: all devices
             self.n_shards = jax.local_device_count()
-            if self.n_shards < 2:
-                raise ValueError(
-                    "engine='fused_sharded' needs >1 visible device but "
-                    "found 1 — on CPU export XLA_FLAGS="
-                    "--xla_force_host_platform_device_count=N BEFORE "
-                    "python starts, or use engine='fused' (a silent "
-                    "single-device run would masquerade as sharded)")
         else:
             self.n_shards = 1
+        if sharded and self.n_shards < 2:
+            # covers the default spec AND num_shards=0 ("all devices")
+            # resolving to 1 on a host without forced devices
+            raise ValueError(
+                "engine='fused_sharded' needs >1 visible device but "
+                f"resolved to {self.n_shards} — on CPU export XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N BEFORE python "
+                "starts, or use engine='fused' (a silent single-device "
+                "run would masquerade as sharded)")
         self.slot, self.Vp = fleet_slots(self.V, self.n_shards,
                                          shard_spec.placement)
         if self.n_shards > 1:

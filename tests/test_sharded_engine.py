@@ -176,6 +176,13 @@ def test_fused_sharded_refuses_single_device_host():
         IoVSimulator(SimConfig(
             method="ours", num_vehicles=4, num_tasks=1, local_steps=1,
             engine="fused_sharded", train_arch=_tiny_cfg(), lora=LORA))
+    # num_shards=0 ("all devices") resolving to 1 must hit the same
+    # guard, not silently run unsharded under the fused_sharded banner
+    with pytest.raises(ValueError, match="visible device"):
+        IoVSimulator(SimConfig(
+            method="ours", num_vehicles=4, num_tasks=1, local_steps=1,
+            engine="fused_sharded", shard=ShardSpec(num_shards=0),
+            train_arch=_tiny_cfg(), lora=LORA))
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +242,15 @@ def test_sharded_knob_with_roundrobin_permutation():
     if spec.num_shards == 4:
         assert not np.array_equal(b.fused.slot,
                                   np.arange(6))   # really permuted
+    _assert_parity(a.run(), b.run())
+
+
+@multi_device
+def test_sharded_matches_fused_urban_grid():
+    """The other fast-parity-subset preset (urban-grid, 1-RSU tier):
+    sharding must also replay the trivial-tier program's trajectory."""
+    a = _scenario_sim("urban-grid", "fused")
+    b = _scenario_sim("urban-grid", "fused_sharded")
     _assert_parity(a.run(), b.run())
 
 
