@@ -1,0 +1,94 @@
+"""Checkpoint-interval overhead benchmark (ISSUE 6 satellite).
+
+Times the fused scanned horizon at checkpoint interval ∈ {off, 50, 10} and
+records time/round into the committed smoke JSON. The self-gating ratio
+check is the point: a checkpoint path that accidentally syncs the device
+carry to host every round (instead of once per interval-sized chunk) makes
+the interval-50 run as slow as the interval-10 run and blows through the
+overhead ceiling, failing CI.
+
+    PYTHONPATH=src python -m benchmarks.checkpoint_overhead --smoke
+
+Method: per interval, one untimed run_scanned(rounds) warms the compile
+caches (chunk sizes 100/50/10 are distinct scan programs — expected, each
+is ONE compile; chunks of equal size share it), then a second
+run_scanned(rounds) on the same sim is timed. Checkpoints go to a temp
+dir that is deleted afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+
+from benchmarks.harness import save_json
+from repro.config import CheckpointSpec
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+INTERVALS = (0, 50, 10)   # 0 = checkpointing off
+# smoke gate: amortized cost of checkpointing every 50 rounds must stay
+# negligible, and even every-10-rounds must stay a bounded multiple of the
+# uncheckpointed run. An accidental per-round host sync fails both.
+MAX_RATIO = {50: 1.5, 10: 3.0}
+
+
+def bench(rounds: int, interval: int, *, vehicles: int, tasks: int) -> dict:
+    ckpt_dir = tempfile.mkdtemp(prefix=f"ckpt_bench_{interval}_")
+    try:
+        ck = (CheckpointSpec(interval=interval, dir=ckpt_dir)
+              if interval else CheckpointSpec())
+        cfg = SimConfig(method="ours", rounds=2 * rounds,
+                        num_vehicles=vehicles, num_tasks=tasks, seed=0,
+                        local_steps=2, engine="fused", checkpoint=ck)
+        sim = IoVSimulator(cfg)
+        sim.run_scanned(rounds)            # warmup: compiles the chunk sizes
+        t0 = time.perf_counter()
+        sim.run_scanned(rounds)            # timed: cache-hot
+        dt = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return {"interval": interval, "rounds": rounds,
+            "time_per_round_ms": round(1e3 * dt / rounds, 3)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale + committed results JSON + gate")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+    rounds = args.rounds or (100 if args.smoke else 200)
+    vehicles, tasks = (8, 2) if args.smoke else (12, 3)
+
+    rows = [bench(rounds, iv, vehicles=vehicles, tasks=tasks)
+            for iv in INTERVALS]
+    base = rows[0]["time_per_round_ms"]
+    failures = []
+    for r in rows:
+        r["ratio_vs_off"] = round(r["time_per_round_ms"] / base, 3)
+        iv = r["interval"]
+        print(f"interval={iv or 'off':>3}: "
+              f"{r['time_per_round_ms']:8.3f} ms/round "
+              f"(x{r['ratio_vs_off']:.2f} vs off)")
+        if iv and r["ratio_vs_off"] > MAX_RATIO[iv]:
+            failures.append(f"interval={iv}: ratio {r['ratio_vs_off']} "
+                            f"> max {MAX_RATIO[iv]}")
+
+    out = {"bench": "checkpoint_overhead", "engine": "fused",
+           "rounds": rounds, "vehicles": vehicles, "tasks": tasks,
+           "max_ratio": {str(k): v for k, v in MAX_RATIO.items()},
+           "results": rows}
+    if args.smoke:
+        path = save_json("BENCH_checkpoint_overhead_smoke.json", out)
+        print(f"wrote {path}")
+    if failures:
+        print("FAIL: checkpoint overhead gate: " + "; ".join(failures))
+        return 1
+    print("checkpoint overhead gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

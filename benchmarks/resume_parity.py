@@ -1,0 +1,231 @@
+"""Kill-and-resume parity harness (CI `resume-parity` job; DESIGN.md §7).
+
+Proves the checkpoint/restore path end to end, the way preemption actually
+happens: a worker subprocess runs a scenario for N rounds with interval
+checkpointing, the driver SIGKILLs it mid-horizon (after at least one
+checkpoint landed, before the DONE sentinel), a second worker resumes from
+the latest checkpoint — and the resumed run's full history AND its final
+checkpoint (adapters, UCB statistics, RNG cursors, everything in the npz)
+must be BIT-IDENTICAL to an uninterrupted reference run of the same config.
+
+    python -m benchmarks.resume_parity --scenario base --engine fused
+    python -m benchmarks.resume_parity --scenario dense-rsu \
+        --engine fused_sharded        # under forced-8-device XLA_FLAGS
+
+The driver never imports jax (comparisons are pure numpy / json), so a
+hung worker cannot wedge it; on failure it writes the two histories and a
+field-level diff into --artifacts for CI upload.
+
+Worker mode (internal): ``--worker`` runs the simulation in this process,
+writes the history JSON to --out, then touches ``DONE`` — the driver
+asserts the kill preceded the sentinel, so a too-fast victim fails loudly
+instead of silently degrading into a no-kill test.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+SENTINEL = "DONE"
+
+
+def build_sim(scenario: str, engine: str, rounds: int, interval: int,
+              ckpt_dir: str):
+    from repro.config import CheckpointSpec
+    from repro.sim.simulator import IoVSimulator, SimConfig
+
+    ck = CheckpointSpec(interval=interval, dir=ckpt_dir)
+    if scenario == "base":
+        cfg = SimConfig(method="ours", rounds=rounds, num_vehicles=8,
+                        num_tasks=2, seed=3, local_steps=2, engine=engine,
+                        checkpoint=ck)
+    else:
+        from repro.sim.scenarios import build_config
+        cfg = build_config(scenario, rounds=rounds, seed=1, engine=engine,
+                           num_vehicles=8, num_tasks=2, checkpoint=ck)
+    return IoVSimulator(cfg)
+
+
+def run_worker(args) -> None:
+    sim = build_sim(args.scenario, args.engine, args.rounds, args.interval,
+                    args.ckpt_dir)
+    done = 0
+    if args.resume:
+        from repro.checkpoint import restore_checkpoint
+        done = restore_checkpoint(sim)
+        print(f"[worker] resumed from round {done}", flush=True)
+    if done < args.rounds:
+        sim.run_scanned(args.rounds - done)
+    with open(args.out, "w") as f:
+        json.dump(sim.history, f, sort_keys=True)
+    # the sentinel marks a worker that FINISHED; the driver requires the
+    # kill to land before it appears
+    with open(os.path.join(args.ckpt_dir, SENTINEL), "w") as f:
+        f.write("done\n")
+
+
+# ---------------------------------------------------------------------------
+# Driver (no jax imports)
+# ---------------------------------------------------------------------------
+
+def _worker_cmd(args, ckpt_dir: str, out: str, resume: bool):
+    cmd = [sys.executable, "-m", "benchmarks.resume_parity", "--worker",
+           "--scenario", args.scenario, "--engine", args.engine,
+           "--rounds", str(args.rounds), "--interval", str(args.interval),
+           "--ckpt-dir", ckpt_dir, "--out", out]
+    if resume:
+        cmd.append("--resume")
+    return cmd
+
+
+def _ckpts(d: str):
+    import re
+    if not os.path.isdir(d):
+        return []
+    return sorted(f for f in os.listdir(d)
+                  if re.fullmatch(r"round_\d+\.npz", f))
+
+
+def _compare_npz(path_a: str, path_b: str):
+    """Bitwise comparison of every array in two checkpoint files."""
+    import numpy as np
+    with np.load(path_a, allow_pickle=False) as za, \
+            np.load(path_b, allow_pickle=False) as zb:
+        if set(za.files) != set(zb.files):
+            return [f"key sets differ: {sorted(set(za.files) ^ set(zb.files))}"]
+        diffs = []
+        for k in za.files:
+            a, b = za[k], zb[k]
+            if a.dtype != b.dtype or a.shape != b.shape:
+                diffs.append(f"{k}: dtype/shape {a.dtype}{a.shape} != "
+                             f"{b.dtype}{b.shape}")
+                continue
+            # equal_nan only exists for float dtypes (ints raise)
+            nan_ok = np.issubdtype(a.dtype, np.floating)
+            if not np.array_equal(a, b, equal_nan=nan_ok):
+                diffs.append(f"{k}: values differ")
+        return diffs
+
+
+def _diff_histories(ref, got):
+    diffs = []
+    if len(ref) != len(got):
+        diffs.append(f"length {len(ref)} != {len(got)}")
+    for ra, rb in zip(ref, got):
+        if json.dumps(ra, sort_keys=True) == json.dumps(rb, sort_keys=True):
+            continue
+        rd = {"round": ra.get("round")}
+        for k in ra:
+            if json.dumps(ra.get(k), sort_keys=True) != \
+                    json.dumps(rb.get(k), sort_keys=True):
+                rd[k] = {"ref": ra.get(k), "resumed": rb.get(k)}
+        diffs.append(rd)
+    return diffs
+
+
+def run_driver(args) -> int:
+    workdir = args.workdir
+    os.makedirs(workdir, exist_ok=True)
+    d_ref = os.path.join(workdir, "ref")
+    d_vic = os.path.join(workdir, "victim")
+    out_ref = os.path.join(workdir, "history_ref.json")
+    out_res = os.path.join(workdir, "history_resumed.json")
+    os.makedirs(d_ref, exist_ok=True)
+    os.makedirs(d_vic, exist_ok=True)
+
+    print(f"[driver] reference run ({args.rounds} rounds, "
+          f"interval {args.interval}, engine {args.engine})", flush=True)
+    subprocess.run(_worker_cmd(args, d_ref, out_ref, False), check=True,
+                   timeout=args.timeout)
+
+    print("[driver] victim run (SIGKILL after first checkpoint)", flush=True)
+    vic = subprocess.Popen(_worker_cmd(args, d_vic, os.path.join(
+        workdir, "history_victim.json"), False))
+    t0 = time.time()
+    killed = False
+    while time.time() - t0 < args.timeout:
+        if os.path.exists(os.path.join(d_vic, SENTINEL)):
+            break   # finished before we could kill — fail below
+        if _ckpts(d_vic) and vic.poll() is None:
+            os.kill(vic.pid, signal.SIGKILL)
+            killed = True
+            break
+        if vic.poll() is not None:
+            break
+        time.sleep(0.2)
+    vic.wait(timeout=60)
+    if not killed or os.path.exists(os.path.join(d_vic, SENTINEL)):
+        print("[driver] FAIL: victim finished before the kill landed — "
+              "raise --rounds (or lower --interval) so the horizon "
+              "outlives the first checkpoint", flush=True)
+        return 1
+    print(f"[driver] killed victim at checkpoints {_ckpts(d_vic)}",
+          flush=True)
+
+    print("[driver] resume run", flush=True)
+    subprocess.run(_worker_cmd(args, d_vic, out_res, True), check=True,
+                   timeout=args.timeout)
+
+    with open(out_ref) as f:
+        href = json.load(f)
+    with open(out_res) as f:
+        hres = json.load(f)
+    hist_ok = json.dumps(href, sort_keys=True) == json.dumps(hres,
+                                                             sort_keys=True)
+    final = f"round_{args.rounds:06d}.npz"
+    ckpt_diffs = _compare_npz(os.path.join(d_ref, final),
+                              os.path.join(d_vic, final))
+    print(f"[driver] history bit-identical: {hist_ok}", flush=True)
+    print(f"[driver] final checkpoint bit-identical: {not ckpt_diffs}",
+          flush=True)
+    if hist_ok and not ckpt_diffs:
+        print("[driver] PASS", flush=True)
+        return 0
+
+    os.makedirs(args.artifacts, exist_ok=True)
+    tag = f"{args.scenario}_{args.engine}"
+    with open(os.path.join(args.artifacts, f"diff_{tag}.json"), "w") as f:
+        json.dump({"scenario": args.scenario, "engine": args.engine,
+                   "history_identical": hist_ok,
+                   "history_diffs": _diff_histories(href, hres),
+                   "checkpoint_diffs": ckpt_diffs}, f, indent=2)
+    import shutil
+    for src, name in ((out_ref, f"history_ref_{tag}.json"),
+                      (out_res, f"history_resumed_{tag}.json"),
+                      (os.path.join(d_ref, final), f"ckpt_ref_{tag}.npz"),
+                      (os.path.join(d_vic, final), f"ckpt_resumed_{tag}.npz")):
+        if os.path.exists(src):
+            shutil.copy(src, os.path.join(args.artifacts, name))
+    print(f"[driver] FAIL — diff artifacts in {args.artifacts}", flush=True)
+    return 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="base",
+                    help="'base' or a repro.sim.scenarios preset name")
+    ap.add_argument("--engine", default="fused",
+                    choices=("fused", "fused_sharded"))
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--interval", type=int, default=2)
+    ap.add_argument("--workdir", default="/tmp/resume_parity")
+    ap.add_argument("--artifacts", default="/tmp/resume_parity/artifacts")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.worker:
+        run_worker(args)
+        return 0
+    return run_driver(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

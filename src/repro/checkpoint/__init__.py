@@ -1,3 +1,6 @@
 from repro.checkpoint.io import (load_pytree, save_pytree,  # noqa: F401
-                                 latest_checkpoint, save_round,
-                                 restore_round)
+                                 latest_checkpoint, prune_checkpoints,
+                                 save_round, restore_round)
+from repro.checkpoint.carry import (config_fingerprint,  # noqa: F401
+                                    host_state, restore_checkpoint,
+                                    save_checkpoint)

@@ -1,0 +1,240 @@
+"""Resumable-horizon checkpointing: the COMPLETE simulator state (DESIGN.md §7).
+
+The fused engine keeps its scan carry on device but mirrors every piece of
+it back onto the :class:`~repro.sim.simulator.IoVSimulator` after each
+round/scan (``FusedRoundEngine._sync_sim``): UCB-DUAL statistics, merged
+deltas, hierarchy partials/ages, allocator state and the round counter.
+That host mirror — plus every host RNG cursor the staging consumes — IS the
+resumable state, so a checkpoint taken at any round boundary restores into
+a *fresh* simulator built from the same config and continues bit-exactly:
+
+  * device state (UCB, merged, partials, alloc) round-trips through f32
+    npz (f32 → np → npz → np → jnp is bitwise);
+  * host RNG streams (mobility Gauss-Markov, channel Rayleigh fades, data
+    shuffles, the server's adapter key) are serialized as generator-state
+    dicts / key arrays, so post-restore staging consumes the SAME draws in
+    the SAME order an uninterrupted run would;
+  * the restored state flows back to the device through the engine's own
+    adoption path (``_init_carry`` → ``_place_carry`` → ``launch.sharding``
+    fleet rules), so a resume may change the device topology or even the
+    engine (fused ↔ fused_sharded ↔ batched ↔ serial) and still replay the
+    identical rounds.
+
+A :func:`config_fingerprint` (sha256 of the canonical SimConfig, minus the
+``engine``/``shard``/``checkpoint``/``rounds`` fields — exactly the knobs a resume is
+allowed to change) is stored with each checkpoint and verified on restore;
+mismatched configs are rejected loudly instead of silently diverging.
+
+Checkpoints are single atomic npz files named ``round_{N:06d}.npz`` in
+``CheckpointSpec.dir`` (see checkpoint.io for the write/collision/bf16
+policies). Take them only at round boundaries — mid-round host state is
+not coherent (the simulator's ``run``/``run_scanned`` do this for you at
+``CheckpointSpec.interval``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import tree_map
+
+from repro.core.energy_alloc import AllocState
+from repro.core.ucb_dual import UCBDualState
+from repro.checkpoint.io import prune_checkpoints, restore_round, save_round
+
+_VERSION = 1
+# the knobs a resume is allowed to change: execution topology and the
+# checkpoint policy never alter the simulated trajectory, and `rounds` is
+# only the default horizon length (run()/run_scanned consume it nowhere
+# else) — extending the horizon on resume is the classic use case
+_FINGERPRINT_EXEMPT = ("engine", "shard", "checkpoint", "rounds")
+
+
+def config_fingerprint(cfg) -> str:
+    """sha256 over the canonical SimConfig dict, minus execution-topology
+    fields (engine, shard, checkpoint) and the horizon length (rounds).
+    Two configs with equal fingerprints stage identical RNG streams and
+    trace identical round programs."""
+    d = dataclasses.asdict(cfg)
+    for k in _FINGERPRINT_EXEMPT:
+        d.pop(k, None)
+    blob = json.dumps(d, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _gen_state(rng: np.random.Generator) -> Dict[str, Any]:
+    return rng.bit_generator.state
+
+
+def _to_jnp(tree):
+    return None if tree is None else tree_map(jnp.asarray, tree)
+
+
+def host_state(sim) -> Dict[str, Any]:
+    """The complete resumable state of `sim` as one checkpointable pytree.
+
+    Array state rides as npz leaves; JSON-only state (history records, RNG
+    generator states, the config fingerprint) rides as a uint8-encoded
+    ``meta`` blob inside the same file — one atomic artifact per round.
+    Must be called at a round boundary (after ``_sync_sim`` for fused
+    engines; ``run``/``run_round`` leave the simulator there)."""
+    m = sim.mobility
+    tasks = sorted(m._assoc_log)
+    V = sim.cfg.num_vehicles
+    meta = {
+        "version": _VERSION,
+        "fingerprint": config_fingerprint(sim.cfg),
+        "round": len(sim.history),
+        "history": sim.history,
+        "rng": {
+            "sim": _gen_state(sim.rng),
+            "mobility": _gen_state(m._rng),
+            "channel": _gen_state(sim.channel._rng),
+            "data": [[_gen_state(ds._rng) for ds in task]
+                     for task in sim.client_data],
+        },
+    }
+    return {
+        "ucb": [dict(s._asdict()) for s in sim.ucb_states],
+        "alloc": {"budgets": np.asarray(sim.alloc.budgets),
+                  "difficulty": np.asarray(sim.alloc.difficulty),
+                  "round": np.int64(sim.alloc.round)},
+        "servers": [{
+            "key": np.asarray(srv.key),
+            "round": np.int64(srv.round),
+            "merged": srv.merged,
+            "global_adapters": srv.global_adapters,
+            "partials": srv.partials,
+            "partial_w": np.asarray(srv.partial_w),
+            "partial_age": np.asarray(srv.partial_age),
+        } for srv in sim.servers],
+        "mobility": {
+            "tick": np.int64(m.tick),
+            "pos": np.asarray(m.pos, np.float64),
+            "vel": np.asarray(m.vel, np.float64),
+            "present": np.asarray(m.present, bool),
+            "assoc_tasks": np.asarray(tasks, np.int64),
+            "assoc_tick": np.asarray(
+                [m._assoc_log[t]["tick"] for t in tasks], np.int64),
+            "assoc_prev": (np.stack(
+                [np.asarray(m._assoc_log[t]["prev"], np.int64)
+                 for t in tasks]) if tasks
+                else np.zeros((0, V), np.int64)),
+            "assoc_cur": (np.stack(
+                [np.asarray(m._assoc_log[t]["cur"], np.int64)
+                 for t in tasks]) if tasks
+                else np.zeros((0, V), np.int64)),
+        },
+        "data": [[{"order": np.asarray(ds._order, np.int64),
+                   "pos": np.int64(ds._pos)} for ds in task]
+                 for task in sim.client_data],
+        "meta": np.frombuffer(json.dumps(meta).encode(), np.uint8).copy(),
+    }
+
+
+def save_checkpoint(sim, ckpt_dir: Optional[str] = None,
+                    keep_last: Optional[int] = None) -> str:
+    """Write ``round_{len(history):06d}.npz`` (atomic) and prune to the
+    newest ``keep_last`` files. Defaults come from ``sim.cfg.checkpoint``;
+    an explicit ``ckpt_dir`` lets callers checkpoint without an enabled
+    spec. Returns the written path."""
+    spec = sim.cfg.checkpoint
+    ckpt_dir = ckpt_dir if ckpt_dir is not None else spec.dir
+    if not ckpt_dir:
+        raise ValueError("save_checkpoint needs a ckpt_dir (or an enabled "
+                         "SimConfig.checkpoint with one)")
+    keep = spec.keep_last if keep_last is None else keep_last
+    path = save_round(ckpt_dir, len(sim.history), host_state(sim))
+    prune_checkpoints(ckpt_dir, keep)
+    return path
+
+
+def _fix_history(history: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Undo JSON's stringification of the per-task fallback-counter keys."""
+    for rec in history:
+        for trec in rec.get("tasks", ()):
+            if "fallbacks" in trec:
+                trec["fallbacks"] = {int(k): v for k, v in
+                                     trec["fallbacks"].items()}
+    return history
+
+
+def restore_checkpoint(sim, ckpt_dir: Optional[str] = None,
+                       round_idx: Optional[int] = None) -> int:
+    """Load a checkpoint into `sim` (freshly built from the SAME config)
+    and leave it exactly where the writer stood: the next round computed
+    is bit-identical to the one an uninterrupted run would have computed.
+
+    round_idx=None restores the latest checkpoint in the directory. The
+    stored config fingerprint must match `sim.cfg` (engine/shard/checkpoint/rounds
+    fields exempt — resumes may change topology); a mismatch raises before
+    any state is touched. Returns the restored round index."""
+    spec = sim.cfg.checkpoint
+    ckpt_dir = ckpt_dir if ckpt_dir is not None else spec.dir
+    if not ckpt_dir:
+        raise ValueError("restore_checkpoint needs a ckpt_dir (or an "
+                         "enabled SimConfig.checkpoint with one)")
+    round_idx, state = restore_round(ckpt_dir, round_idx, numpy=True)
+    meta = json.loads(bytes(state["meta"]).decode())
+    if meta.get("version") != _VERSION:
+        raise ValueError(f"checkpoint version {meta.get('version')!r} != "
+                         f"supported version {_VERSION}")
+    want = config_fingerprint(sim.cfg)
+    if meta["fingerprint"] != want:
+        raise ValueError(
+            "checkpoint was written by a DIFFERENT SimConfig "
+            f"(fingerprint {meta['fingerprint'][:12]}… != {want[:12]}…); "
+            "only engine/shard/checkpoint/rounds may change across a resume")
+    if meta["round"] != round_idx:
+        raise ValueError(f"checkpoint metadata claims round {meta['round']} "
+                         f"but the file is round_{round_idx:06d}.npz")
+
+    sim.history = _fix_history(meta["history"])
+    sim.ucb_states = [UCBDualState(**{k: jnp.asarray(v)
+                                      for k, v in d.items()})
+                      for d in state["ucb"]]
+    a = state["alloc"]
+    sim.alloc = AllocState(budgets=jnp.asarray(a["budgets"]),
+                           difficulty=jnp.asarray(a["difficulty"]),
+                           round=int(a["round"]))
+    for srv, sd in zip(sim.servers, state["servers"]):
+        srv.key = jnp.asarray(sd["key"])
+        srv.round = int(sd["round"])
+        srv.merged = _to_jnp(sd["merged"])
+        srv.global_adapters = _to_jnp(sd["global_adapters"])
+        srv.partials = (None if sd["partials"] is None
+                        else [_to_jnp(p) for p in sd["partials"]])
+        srv.partial_w = np.asarray(sd["partial_w"], np.float64).copy()
+        srv.partial_age = np.asarray(sd["partial_age"], np.int64).copy()
+
+    md = state["mobility"]
+    m = sim.mobility
+    m.tick = int(md["tick"])
+    m.pos = np.asarray(md["pos"], np.float64)
+    m.vel = np.asarray(md["vel"], np.float64)
+    m.present = np.asarray(md["present"], bool)
+    m._assoc_log = {
+        int(t): {"tick": int(md["assoc_tick"][i]),
+                 "prev": np.asarray(md["assoc_prev"][i], np.int64),
+                 "cur": np.asarray(md["assoc_cur"][i], np.int64)}
+        for i, t in enumerate(md["assoc_tasks"])}
+    m._rng.bit_generator.state = meta["rng"]["mobility"]
+    sim.channel._rng.bit_generator.state = meta["rng"]["channel"]
+    sim.rng.bit_generator.state = meta["rng"]["sim"]
+    for t, task in enumerate(sim.client_data):
+        for v, ds in enumerate(task):
+            dd = state["data"][t][v]
+            ds._order = np.asarray(dd["order"], np.int64)
+            ds._pos = int(dd["pos"])
+            ds._rng.bit_generator.state = meta["rng"]["data"][t][v]
+
+    if sim.fused is not None:
+        # the next round re-adopts the restored host state through
+        # _init_carry → _place_carry, i.e. launch.sharding's fleet rules —
+        # this is what makes the restore topology- and engine-portable
+        sim.fused.reset_carry()
+    return round_idx

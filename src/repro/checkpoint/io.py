@@ -3,13 +3,31 @@
 Flattens an arbitrary pytree of arrays to path-keyed npz entries; structure
 is recorded as a JSON skeleton so load restores the exact tree (dicts, lists,
 tuples, NamedTuple-free). Used for federated round state (global adapters,
-bandit statistics, budgets) and training state.
+bandit statistics, budgets), training state, and the simulator's resumable
+round checkpoints (repro.checkpoint.carry).
+
+Format notes (DESIGN.md §7):
+  * dict keys are escaped (``%`` → ``%25``, ``/`` → ``%2F``) before joining
+    with the ``/`` separator, so a key containing the separator (or a
+    numeric key next to a list index) can never collide with another leaf's
+    flat path; a defensive collision assertion backs the escaping.
+  * writes are atomic (tmp file + ``os.replace``): a checkpoint killed
+    mid-write (SIGKILL during a preempted run) never leaves a truncated
+    npz behind — the previous checkpoint stays the latest valid one.
+  * bfloat16 leaves are stored upcast to float32 (numpy's npz format cannot
+    serialize the ml_dtypes bf16 dtype); the skeleton records the original
+    dtype and load casts back, so ``load_pytree(save_pytree(t)) == t``
+    exactly (bf16 ⊂ f32). With ``numpy=True`` load returns numpy arrays in
+    the exact recorded dtypes (float64/int64 stay 64-bit — required for
+    bit-exact host RNG/mobility state restores); the default returns jnp
+    arrays in JAX's canonical dtypes.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -17,6 +35,16 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+_SKELETON_KEY = "__skeleton__"
+# structure markers inside the JSON skeleton; a user dict key with one of
+# these names would be misread as structure on load, so reject at save
+_RESERVED_KEYS = ("__none__", "__leaf__", "__dtype__", "__list__",
+                  "__tuple__")
+
+
+def _esc(key: str) -> str:
+    """Escape a dict key for use inside a flat `/`-joined path."""
+    return key.replace("%", "%25").replace(_SEP, "%2F")
 
 
 def _flatten(tree: Any, prefix: str = "") -> Tuple[Dict[str, np.ndarray], Any]:
@@ -25,14 +53,33 @@ def _flatten(tree: Any, prefix: str = "") -> Tuple[Dict[str, np.ndarray], Any]:
     if isinstance(tree, dict):
         leaves, skel = {}, {}
         for k in sorted(tree):
-            sub_l, sub_s = _flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"dict keys must be str for npz checkpointing, got "
+                    f"{k!r} ({type(k).__name__}) under {prefix!r}")
+            if k in _RESERVED_KEYS:
+                raise ValueError(
+                    f"dict key {k!r} (under {prefix!r}) collides with a "
+                    "reserved skeleton marker; rename it")
+            ek = _esc(k)
+            sub_l, sub_s = _flatten(tree[k],
+                                    f"{prefix}{_SEP}{ek}" if prefix else ek)
+            for fk in sub_l:
+                if fk in leaves:   # escaping makes paths injective; keep a
+                    raise ValueError(   # loud assertion anyway
+                        f"flat key collision at {fk!r} (under {prefix!r})")
             leaves.update(sub_l)
             skel[k] = sub_s
         return leaves, skel
     if isinstance(tree, (list, tuple)):
         leaves, skel = {}, []
         for i, v in enumerate(tree):
-            sub_l, sub_s = _flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i))
+            sub_l, sub_s = _flatten(v, f"{prefix}{_SEP}{i}" if prefix else
+                                    str(i))
+            for fk in sub_l:
+                if fk in leaves:
+                    raise ValueError(
+                        f"flat key collision at {fk!r} (under {prefix!r})")
             leaves.update(sub_l)
             skel.append(sub_s)
         return leaves, {"__list__": skel,
@@ -40,36 +87,76 @@ def _flatten(tree: Any, prefix: str = "") -> Tuple[Dict[str, np.ndarray], Any]:
     if tree is None:
         return {}, {"__none__": True}
     arr = np.asarray(tree)
-    return {prefix: arr}, {"__leaf__": prefix,
-                           "__dtype__": str(arr.dtype)}
+    dtype = str(arr.dtype)
+    if dtype == "bfloat16":
+        # npz cannot serialize the ml_dtypes bf16 dtype; store upcast to
+        # f32 (exact — bf16 ⊂ f32) and record the original for load
+        arr = arr.astype(np.float32)
+    if not prefix:
+        raise ValueError("cannot checkpoint a bare leaf; wrap it in a "
+                         "dict/list/tuple")
+    if prefix == _SKELETON_KEY:
+        raise ValueError(
+            f"flat key {prefix!r} collides with the reserved skeleton "
+            "entry; rename the top-level dict key")
+    return {prefix: arr}, {"__leaf__": prefix, "__dtype__": dtype}
 
 
-def _unflatten(skel: Any, leaves: Dict[str, np.ndarray]) -> Any:
+def _unflatten(skel: Any, leaves: Dict[str, np.ndarray],
+               numpy: bool = False) -> Any:
     if isinstance(skel, dict):
         if skel.get("__none__"):
             return None
         if "__leaf__" in skel:
             arr = leaves[skel["__leaf__"]]
+            dtype = skel.get("__dtype__")
+            if numpy:
+                if dtype == "bfloat16":
+                    import ml_dtypes
+                    return arr.astype(ml_dtypes.bfloat16)
+                return arr if dtype is None else arr.astype(dtype)
+            if dtype == "bfloat16":
+                return jnp.asarray(arr, jnp.bfloat16)
             return jnp.asarray(arr)
         if "__list__" in skel:
-            items = [_unflatten(s, leaves) for s in skel["__list__"]]
+            items = [_unflatten(s, leaves, numpy) for s in skel["__list__"]]
             return tuple(items) if skel.get("__tuple__") else items
-        return {k: _unflatten(v, leaves) for k, v in skel.items()}
+        return {k: _unflatten(v, leaves, numpy) for k, v in skel.items()}
     raise ValueError(f"bad skeleton node {skel!r}")
 
 
 def save_pytree(path: str, tree: Any) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    """Atomically write `tree` to `path` (tmp file + rename): a writer
+    killed mid-save never clobbers or truncates an existing checkpoint."""
+    path = os.path.abspath(path)
+    d = os.path.dirname(path)
+    os.makedirs(d, exist_ok=True)
     leaves, skel = _flatten(jax.device_get(tree))
-    np.savez_compressed(path, __skeleton__=json.dumps(skel),
-                        **{k: v for k, v in leaves.items()})
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, **{_SKELETON_KEY: json.dumps(skel)},
+                                **leaves)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
-def load_pytree(path: str) -> Any:
+def load_pytree(path: str, *, numpy: bool = False) -> Any:
+    """Restore the exact tree saved by :func:`save_pytree`.
+
+    numpy=False (default): leaves come back as jnp arrays in JAX's
+    canonical dtypes (f64 narrows to f32 unless x64 is enabled).
+    numpy=True: leaves are numpy arrays in the exact recorded dtypes —
+    use for host-side state that must round-trip bit-exactly.
+    """
     with np.load(path, allow_pickle=False) as z:
-        skel = json.loads(str(z["__skeleton__"]))
-        leaves = {k: z[k] for k in z.files if k != "__skeleton__"}
-    return _unflatten(skel, leaves)
+        skel = json.loads(str(z[_SKELETON_KEY]))
+        leaves = {k: z[k] for k in z.files if k != _SKELETON_KEY}
+    return _unflatten(skel, leaves, numpy=numpy)
 
 
 def save_round(ckpt_dir: str, round_idx: int, state: Any) -> str:
@@ -78,7 +165,8 @@ def save_round(ckpt_dir: str, round_idx: int, state: Any) -> str:
     return path
 
 
-def restore_round(ckpt_dir: str, round_idx: Optional[int] = None) -> Tuple[int, Any]:
+def restore_round(ckpt_dir: str, round_idx: Optional[int] = None,
+                  *, numpy: bool = False) -> Tuple[int, Any]:
     if round_idx is None:
         path = latest_checkpoint(ckpt_dir)
         if path is None:
@@ -86,7 +174,17 @@ def restore_round(ckpt_dir: str, round_idx: Optional[int] = None) -> Tuple[int, 
         round_idx = int(re.search(r"round_(\d+)", path).group(1))
     else:
         path = os.path.join(ckpt_dir, f"round_{round_idx:06d}.npz")
-    return round_idx, load_pytree(path)
+        if not os.path.exists(path):
+            have = sorted(
+                int(m.group(1)) for m in (
+                    re.fullmatch(r"round_(\d+)\.npz", f)
+                    for f in (os.listdir(ckpt_dir)
+                              if os.path.isdir(ckpt_dir) else []))
+                if m)
+            raise FileNotFoundError(
+                f"no checkpoint for round {round_idx} in {ckpt_dir} "
+                f"(have rounds {have})")
+    return round_idx, load_pytree(path, numpy=numpy)
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
@@ -95,3 +193,17 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
     cands = sorted(f for f in os.listdir(ckpt_dir)
                    if re.fullmatch(r"round_\d+\.npz", f))
     return os.path.join(ckpt_dir, cands[-1]) if cands else None
+
+
+def prune_checkpoints(ckpt_dir: str, keep_last: int) -> int:
+    """Delete all but the newest `keep_last` round checkpoints (by round
+    index). keep_last <= 0 keeps everything. Returns the number removed."""
+    if keep_last <= 0 or not os.path.isdir(ckpt_dir):
+        return 0
+    cands = sorted(f for f in os.listdir(ckpt_dir)
+                   if re.fullmatch(r"round_\d+\.npz", f))
+    removed = 0
+    for f in cands[:-keep_last]:
+        os.unlink(os.path.join(ckpt_dir, f))
+        removed += 1
+    return removed

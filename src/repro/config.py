@@ -378,6 +378,43 @@ class ShardSpec:
 
 
 @dataclass(frozen=True)
+class CheckpointSpec:
+    """Checkpoint/restore policy for long simulator horizons (DESIGN.md §7).
+
+    With ``interval > 0`` the round engines emit a checkpoint every
+    ``interval`` completed rounds: ``IoVSimulator.run_scanned`` scans in
+    interval-sized chunks (the SAME compiled scan program per chunk — the
+    chunking adds no XLA cache keys) and ``run`` checkpoints on round
+    boundaries. A checkpoint is one atomically-written npz under ``dir``
+    holding the complete resumable state — the fused engine's round carry
+    (mirrored to host lane order, so a restore may change device topology
+    or engine), every host RNG cursor (mobility, channel, per-client data
+    streams, server key streams) and the recorded history — plus a
+    :func:`repro.checkpoint.carry.config_fingerprint` of the SimConfig so
+    mismatched restores are rejected instead of silently diverging.
+
+    ``keep_last = k > 0`` prunes all but the newest k checkpoints after
+    each save; 0 keeps everything.
+    """
+    interval: int = 0            # rounds between checkpoints; 0 = off
+    dir: Optional[str] = None    # checkpoint directory (required if enabled)
+    keep_last: int = 0           # prune to the newest k files; 0 = keep all
+
+    @property
+    def enabled(self) -> bool:
+        return self.interval > 0
+
+    def __post_init__(self):
+        if self.interval < 0:
+            raise ValueError("checkpoint interval must be >= 0 (0 = off)")
+        if self.keep_last < 0:
+            raise ValueError("keep_last must be >= 0 (0 = keep all)")
+        if self.interval > 0 and not self.dir:
+            raise ValueError(
+                "an enabled CheckpointSpec (interval > 0) needs a dir")
+
+
+@dataclass(frozen=True)
 class OutageSpec:
     """RSU coverage outage: RSU ``rsu_id`` has zero effective radius for
     round indices ``start <= round < end`` (0-based). Vehicles lose coverage

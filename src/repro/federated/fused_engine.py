@@ -440,6 +440,18 @@ class FusedRoundEngine:
         self._carry = self._place_carry(self._carry)
 
     # ------------------------------------------------------------------
+    def reset_carry(self) -> None:
+        """Drop the device carry so the next round re-adopts the
+        simulator's host state through ``_init_carry`` → ``_place_carry``
+        (the ``launch.sharding`` fleet rules). checkpoint.carry calls this
+        after a restore: the rebuilt carry lands on whatever device
+        topology THIS engine runs, so a resumed run may change the mesh or
+        the engine and still replay the identical rounds."""
+        self._carry = None
+        self._has_merged_host = [self.sim.servers[t].merged is not None
+                                 for t in range(self.T)]
+
+    # ------------------------------------------------------------------
     # Host staging: consume the serial engine's RNG streams, same order
     # ------------------------------------------------------------------
     def _stage_round(self, allow_fresh: Sequence[bool]
@@ -843,7 +855,18 @@ class FusedRoundEngine:
     def run_scanned(self, rounds: int) -> List[Dict[str, Any]]:
         """R rounds in ONE ``lax.scan``-wrapped XLA call: all mobility
         traces, channel draws and data batches are pre-staged, so the host
-        is not consulted between rounds at all."""
+        is not consulted between rounds at all.
+
+        Successive calls with the same ``rounds`` reuse ONE compiled scan
+        program (``_jit_scan`` keys on the horizon): the simulator's
+        checkpoint-chunked ``run_scanned`` exploits this, scanning a long
+        horizon in equal interval-sized chunks with a checkpoint at every
+        boundary and no added cache keys (DESIGN.md §7). The staging RNG
+        streams are consumed in round order either way, so chunked and
+        monolithic scans stage identical rounds — the one caveat is the
+        trivial-tier zero-kept-uploads corner already documented in the
+        module docstring (fresh staging is local to a call), which resets
+        per chunk instead of per horizon."""
         if self.check:
             # the serial replay needs per-round host control (and scanning
             # would stack every round's fleet adapter trees into the scan

@@ -8,6 +8,13 @@ tensor/expert parallelism over `model`.
 Also usable as a CLI for the end-to-end example:
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 200
 (CPU: uses the reduced config unless --full.)
+
+The CLI is resumable (DESIGN.md §7): ``--checkpoint-every N`` writes
+adapters + Adam state + the data RNG cursor to ``--checkpoint-dir`` every
+N steps (atomic npz, keyed by a config fingerprint), and ``--resume``
+restores the latest one and continues the step loop bit-identically:
+    PYTHONPATH=src python -m repro.launch.train --steps 200 \
+        --checkpoint-every 50 --checkpoint-dir /tmp/lm-ckpt [--resume]
 """
 from __future__ import annotations
 
@@ -125,6 +132,8 @@ def abstract_state(cfg: ModelConfig, lora: LoRAConfig, *, rank: int,
 
 def main():
     import argparse
+    import hashlib
+    import json
     import time
 
     import numpy as np
@@ -138,7 +147,17 @@ def main():
     parser.add_argument("--lr", type=float, default=1e-3)
     parser.add_argument("--full", action="store_true",
                         help="use the full (not reduced) config")
+    parser.add_argument("--checkpoint-every", type=int, default=0,
+                        help="checkpoint adapters/optimizer every N steps "
+                             "(0 = off; needs --checkpoint-dir)")
+    parser.add_argument("--checkpoint-dir", default=None,
+                        help="directory for round_*.npz step checkpoints")
+    parser.add_argument("--resume", action="store_true",
+                        help="restore the latest checkpoint from "
+                             "--checkpoint-dir and continue the step loop")
     args = parser.parse_args()
+    if (args.checkpoint_every > 0 or args.resume) and not args.checkpoint_dir:
+        parser.error("--checkpoint-every/--resume need --checkpoint-dir")
 
     if args.full:
         from repro.config import get_arch
@@ -165,10 +184,49 @@ def main():
         return apply_updates(adapters, updates), opt_state, metrics
 
     rng = np.random.default_rng(0)
+    # the fingerprint pins everything that shapes the trajectory; a resume
+    # against a different run config is rejected instead of diverging
+    fp = hashlib.sha256(json.dumps(
+        {"arch": args.arch, "full": args.full, "batch": args.batch,
+         "seq": args.seq, "rank": args.rank, "lr": args.lr},
+        sort_keys=True).encode()).hexdigest()
+    start = 0
+    if args.resume:
+        from repro.checkpoint import latest_checkpoint, restore_round
+        from repro.optim.adam import AdamState
+        if latest_checkpoint(args.checkpoint_dir) is not None:
+            start, state = restore_round(args.checkpoint_dir)
+            meta = json.loads(bytes(np.asarray(state["meta"])).decode())
+            if meta["fingerprint"] != fp:
+                raise SystemExit(
+                    "checkpoint in --checkpoint-dir was written by a "
+                    "different run config (arch/batch/seq/rank/lr)")
+            adapters = state["adapters"]
+            opt_state = AdamState(step=state["opt"]["step"],
+                                  mu=state["opt"]["mu"],
+                                  nu=state["opt"]["nu"])
+            rng.bit_generator.state = meta["rng"]
+            print(f"resumed from step {start} ({args.checkpoint_dir})")
+        else:
+            print(f"no checkpoint in {args.checkpoint_dir}; "
+                  "starting from step 0")
+
+    def save_step(step_idx):
+        from repro.checkpoint import prune_checkpoints, save_round
+        save_round(args.checkpoint_dir, step_idx, {
+            "adapters": adapters,
+            "opt": {"step": opt_state.step, "mu": opt_state.mu,
+                    "nu": opt_state.nu},
+            "meta": np.frombuffer(json.dumps(
+                {"fingerprint": fp, "step": step_idx,
+                 "rng": rng.bit_generator.state}).encode(),
+                np.uint8).copy()})
+        prune_checkpoints(args.checkpoint_dir, keep_last=3)
+
     # tiny synthetic LM task: predict tok_{t+1} = (tok_t * 7 + 1) mod V
     V = cfg.vocab_size
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         first = rng.integers(0, V, size=(args.batch, 1))
         seq = [first]
         for _ in range(args.seq):
@@ -184,6 +242,8 @@ def main():
             print(f"step {i:4d} loss={float(m['loss']):.4f} "
                   f"acc={float(m['accuracy']):.3f} "
                   f"({time.time()-t0:.1f}s)")
+        if args.checkpoint_every and (i + 1) % args.checkpoint_every == 0:
+            save_step(i + 1)
     print("done.")
 
 

@@ -30,9 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import (EnergyAllocConfig, LoRAConfig, MobilityConfig,
-                          ModelConfig, RSUTierSpec, ShardSpec, UCBDualConfig,
-                          get_arch)
+from repro.config import (CheckpointSpec, EnergyAllocConfig, LoRAConfig,
+                          MobilityConfig, ModelConfig, RSUTierSpec, ShardSpec,
+                          UCBDualConfig, get_arch)
 from repro.core import cost_model as cm
 from repro.core import energy_alloc, mobility as mob
 from repro.core import ucb_dual
@@ -95,6 +95,13 @@ class SimConfig:
     # spec shards the fused engine even under engine="fused"; the trivial
     # default keeps the single-device program byte-for-byte.
     shard: ShardSpec = field(default_factory=ShardSpec)
+    # resumable horizons (repro.checkpoint.carry; DESIGN.md §7): an enabled
+    # spec makes run()/run_scanned() emit an atomic full-state checkpoint
+    # every `interval` rounds; run_scanned scans in interval-sized chunks
+    # (equal chunks share one compiled scan program). Like `shard`, the
+    # spec never alters the simulated trajectory — it is exempt from the
+    # restore fingerprint, so resumes may change it freely.
+    checkpoint: CheckpointSpec = field(default_factory=CheckpointSpec)
     # bookkeeping label set by repro.sim.scenarios.build_config; the actual
     # scenario recipe (trace, RSU layout, outages) lives in mobility_sim
     scenario: Optional[str] = None
@@ -654,23 +661,48 @@ class IoVSimulator:
         `lax.scan`-wrapped XLA call. Mobility traces, channel draws and data
         batches are pre-staged on the host (consuming the same RNG streams
         as per-round execution), then the device runs every round without
-        host involvement. Appends to and returns self.history."""
+        host involvement. Appends to and returns self.history.
+
+        With an enabled ``SimConfig.checkpoint`` the horizon is scanned in
+        ``interval``-sized chunks with an atomic full-state checkpoint
+        (repro.checkpoint.carry) at every boundary. Equal chunks reuse ONE
+        compiled scan program — the fused engine keys its scan cache on the
+        chunk length, so chunking adds no cache keys; only a non-multiple
+        tail chunk compiles a second (shorter) program. The staging RNG
+        streams are consumed in round order either way, so the chunked
+        trajectory replays the per-round one."""
         if self.fused is None:
             raise ValueError(
                 "run_scanned requires engine='fused' "
                 f"(engine={self.engine!r})")
-        return self.fused.run_scanned(rounds or self.cfg.rounds)
+        n = rounds or self.cfg.rounds
+        ck = self.cfg.checkpoint
+        if not ck.enabled:
+            return self.fused.run_scanned(n)
+        from repro.checkpoint.carry import save_checkpoint
+        out: List[Dict[str, Any]] = []
+        done = 0
+        while done < n:
+            chunk = min(ck.interval, n - done)
+            out.extend(self.fused.run_scanned(chunk))
+            done += chunk
+            save_checkpoint(self)
+        return out
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0
             ) -> List[Dict[str, Any]]:
         n = rounds or self.cfg.rounds
+        ck = self.cfg.checkpoint
         for i in range(n):
             rec = self.run_round()
             if log_every and (i % log_every == 0):
                 print(f"[{self.cfg.method}] round {i:3d} "
                       f"acc={rec['accuracy']:.3f} reward={rec['reward']:.2f} "
                       f"E={rec['energy']:.0f}J lat={rec['latency']:.1f}s")
+            if ck.enabled and len(self.history) % ck.interval == 0:
+                from repro.checkpoint.carry import save_checkpoint
+                save_checkpoint(self)
         return self.history
 
     # ------------------------------------------------------------------

@@ -1,0 +1,237 @@
+"""checkpoint.io: npz pytree round-trips, the key-escaping collision fix,
+atomic writes, and the round-file helpers (latest/restore/prune).
+
+The hypothesis property test mirrors tests/test_properties.py's pattern —
+it is skipped cleanly when hypothesis is not installed; deterministic
+round-trip coverage below runs everywhere.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_checkpoint, load_pytree,
+                              prune_checkpoints, restore_round, save_pytree,
+                              save_round)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _paths_values(tree, prefix=()):
+    """(path, np.ndarray) pairs for structural comparison."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _paths_values(tree[k], prefix + (("d", k),))
+    elif isinstance(tree, (list, tuple)):
+        yield prefix + (("kind", type(tree).__name__),), None
+        for i, v in enumerate(tree):
+            yield from _paths_values(v, prefix + (("i", i),))
+    elif tree is None:
+        yield prefix + (("none",),), None
+    else:
+        yield prefix, np.asarray(tree)
+
+
+def assert_tree_equal(a, b):
+    pa, pb = list(_paths_values(a)), list(_paths_values(b))
+    assert [p for p, _ in pa] == [p for p, _ in pb]
+    for (p, va), (_, vb) in zip(pa, pb):
+        if va is None:
+            continue
+        assert va.shape == vb.shape, p
+        assert np.array_equal(np.asarray(va, np.float64),
+                              np.asarray(vb, np.float64)), p
+
+
+# ---------------------------------------------------------------------------
+# Round-trips
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_nested_structure(tmp_path):
+    tree = {"a": {"b": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+                  "c": [jnp.ones((2,)), None,
+                        (jnp.zeros((1,)), jnp.asarray(True))]},
+            "empty": {}, "flag": None}
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p)
+    assert_tree_equal(tree, out)
+    # lists stay lists, tuples stay tuples
+    assert isinstance(out["a"]["c"], list)
+    assert isinstance(out["a"]["c"][2], tuple)
+    assert out["a"]["b"].dtype == jnp.int32
+
+
+def test_roundtrip_numpy_mode_preserves_64bit(tmp_path):
+    tree = {"f64": np.arange(4, dtype=np.float64) / 7.0,
+            "i64": np.asarray([2**40, -3], dtype=np.int64),
+            "u8": np.frombuffer(b"meta", np.uint8).copy()}
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p, numpy=True)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype, k
+        assert np.array_equal(out[k], tree[k])
+    # default (jnp) mode narrows f64 -> f32 under disabled x64 — that is
+    # exactly why host RNG state goes through numpy mode
+    jout = load_pytree(p)
+    assert jout["f64"].dtype == jnp.float32
+
+
+def test_roundtrip_bfloat16(tmp_path):
+    tree = {"w": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16)}
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p)
+    assert out["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(out["w"], np.float32),
+                          np.asarray(tree["w"], np.float32))
+    nout = load_pytree(p, numpy=True)
+    assert str(nout["w"].dtype) == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# Key-collision regression (the escaping fix)
+# ---------------------------------------------------------------------------
+
+def test_separator_in_key_does_not_collide(tmp_path):
+    # pre-fix, "a/b" and {"a": {"b": ...}} flattened to the SAME npz key
+    # and one leaf silently clobbered the other
+    tree = {"a/b": jnp.asarray([1.0]), "a": {"b": jnp.asarray([2.0])}}
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p)
+    assert float(out["a/b"][0]) == 1.0
+    assert float(out["a"]["b"][0]) == 2.0
+
+
+def test_numeric_key_next_to_list_index(tmp_path):
+    # a dict key "0" and a list index 0 live under the same parent path
+    tree = {"x": {"0": jnp.asarray([1.0]), "items": [jnp.asarray([2.0])]},
+            "pct": {"50%": jnp.asarray([3.0]), "50%25": jnp.asarray([4.0])}}
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p)
+    assert float(out["x"]["0"][0]) == 1.0
+    assert float(out["x"]["items"][0][0]) == 2.0
+    assert float(out["pct"]["50%"][0]) == 3.0
+    assert float(out["pct"]["50%25"][0]) == 4.0
+
+
+def test_non_string_dict_key_raises(tmp_path):
+    with pytest.raises(TypeError, match="dict keys must be str"):
+        save_pytree(str(tmp_path / "t.npz"), {"a": {0: jnp.zeros(1)}})
+
+
+def test_bare_leaf_raises(tmp_path):
+    with pytest.raises(ValueError, match="bare leaf"):
+        save_pytree(str(tmp_path / "t.npz"), jnp.zeros(3))
+
+
+def test_reserved_skeleton_key_raises(tmp_path):
+    with pytest.raises(ValueError, match="reserved skeleton"):
+        save_pytree(str(tmp_path / "t.npz"),
+                    {"__skeleton__": jnp.zeros(1)})
+
+
+@pytest.mark.parametrize("key", ["__none__", "__leaf__", "__dtype__",
+                                 "__list__", "__tuple__"])
+def test_reserved_marker_keys_raise(tmp_path, key):
+    # these would be misread as skeleton structure markers on load
+    with pytest.raises(ValueError, match="reserved skeleton marker"):
+        save_pytree(str(tmp_path / "t.npz"), {"a": {key: jnp.zeros(1)}})
+
+
+# ---------------------------------------------------------------------------
+# Atomicity + round-file helpers
+# ---------------------------------------------------------------------------
+
+def test_atomic_write_no_tmp_residue(tmp_path):
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, {"a": jnp.ones(2)})
+    save_pytree(p, {"a": jnp.zeros(2)})          # overwrite in place
+    assert [f for f in os.listdir(tmp_path)] == ["t.npz"]
+    assert float(load_pytree(p)["a"][0]) == 0.0
+
+
+def test_failed_save_leaves_existing_checkpoint(tmp_path):
+    p = str(tmp_path / "t.npz")
+    save_pytree(p, {"a": jnp.ones(2)})
+    with pytest.raises(TypeError):
+        save_pytree(p, {"a": {1: jnp.zeros(1)}})
+    assert sorted(os.listdir(tmp_path)) == ["t.npz"]
+    assert float(load_pytree(p)["a"][0]) == 1.0
+
+
+def test_latest_checkpoint_edge_cases(tmp_path):
+    assert latest_checkpoint(str(tmp_path / "missing")) is None
+    assert latest_checkpoint(str(tmp_path)) is None          # empty dir
+    save_round(str(tmp_path), 3, {"a": jnp.ones(1)})
+    save_round(str(tmp_path), 12, {"a": jnp.ones(1)})
+    assert latest_checkpoint(str(tmp_path)).endswith("round_000012.npz")
+
+
+def test_restore_round_missing(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        restore_round(str(tmp_path / "missing"))
+    save_round(str(tmp_path), 2, {"a": jnp.ones(1)})
+    with pytest.raises(FileNotFoundError,
+                       match=r"no checkpoint for round 5 .*have rounds \[2\]"):
+        restore_round(str(tmp_path), 5)
+    idx, state = restore_round(str(tmp_path))
+    assert idx == 2 and float(state["a"][0]) == 1.0
+
+
+def test_prune_keep_last_k(tmp_path):
+    for i in (1, 2, 3, 4, 5):
+        save_round(str(tmp_path), i, {"a": jnp.full((1,), float(i))})
+    assert prune_checkpoints(str(tmp_path), keep_last=2) == 3
+    left = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert left == ["round_000004.npz", "round_000005.npz"]
+    assert prune_checkpoints(str(tmp_path), keep_last=0) == 0   # keep all
+    assert prune_checkpoints(str(tmp_path / "missing"), keep_last=1) == 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: arbitrary nested trees round-trip exactly
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _KEYS = st.text(
+        st.characters(min_codepoint=32, max_codepoint=126), min_size=1,
+        max_size=8).filter(lambda s: not s.startswith("__"))
+
+    def _leaves():
+        shapes = st.sampled_from([(), (1,), (3,), (2, 2)])
+
+        def arr(dtype, elems):
+            return shapes.flatmap(lambda sh: st.lists(
+                elems, min_size=int(np.prod(sh, dtype=int)),
+                max_size=int(np.prod(sh, dtype=int))).map(
+                    lambda xs: np.asarray(xs, dtype).reshape(sh)))
+        f32 = arr(np.float32, st.floats(-1e6, 1e6, width=32))
+        i32 = arr(np.int32, st.integers(-2**31, 2**31 - 1))
+        b = arr(np.bool_, st.booleans())
+        bf16 = f32.map(lambda a: jnp.asarray(a, jnp.bfloat16))
+        return st.one_of(st.none(), f32, i32, b, bf16)
+
+    _TREES = st.recursive(
+        _leaves(),
+        lambda kids: st.one_of(
+            st.dictionaries(_KEYS, kids, max_size=3),
+            st.lists(kids, max_size=3),
+            st.lists(kids, max_size=3).map(tuple)),
+        max_leaves=8).map(lambda t: t if isinstance(t, dict) else {"root": t})
+
+    @settings(max_examples=25, deadline=None)
+    @given(_TREES)
+    def test_roundtrip_property(tmp_path_factory, tree):
+        p = str(tmp_path_factory.mktemp("ckpt") / "t.npz")
+        save_pytree(p, tree)
+        assert_tree_equal(tree, load_pytree(p))
+        assert_tree_equal(tree, load_pytree(p, numpy=True))

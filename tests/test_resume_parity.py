@@ -1,0 +1,215 @@
+"""Checkpoint/restore of the full simulator state (DESIGN.md §7).
+
+Fast tier: CheckpointSpec validation, config-fingerprint rejection,
+interval checkpoint emission from both run() and run_scanned(), and the
+in-process kill-and-resume parity contract on the fused engine — a run
+restored into a FRESH simulator must finish the horizon bit-identically
+(history JSON and the final checkpoint file) to an uninterrupted run.
+Slow tier: chunked-vs-monolithic scan parity and the recompile guard
+(equal-size chunks must reuse ONE compiled scan program), plus the same
+kill-and-resume contract on a multi-RSU hierarchy preset.
+
+The subprocess SIGKILL variant of all this lives in
+benchmarks/resume_parity.py and runs as CI's `resume-parity` job.
+"""
+import json
+import logging
+import os
+
+import jax
+import pytest
+
+from repro.checkpoint import (config_fingerprint, latest_checkpoint,
+                              restore_checkpoint, save_checkpoint)
+from repro.config import CheckpointSpec
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+
+def _cfg(engine="fused", rounds=6, ckpt=None, **over):
+    base = dict(method="ours", rounds=rounds, num_vehicles=8, num_tasks=2,
+                seed=3, local_steps=2, engine=engine)
+    if ckpt is not None:
+        base["checkpoint"] = ckpt
+    base.update(over)
+    return SimConfig(**base)
+
+
+def _hist(sim):
+    return json.dumps(sim.history, sort_keys=True)
+
+
+def _ckpts(d):
+    return sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+
+
+# ---------------------------------------------------------------------------
+# CheckpointSpec
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_spec_validation(tmp_path):
+    assert not CheckpointSpec().enabled
+    spec = CheckpointSpec(interval=5, dir=str(tmp_path), keep_last=2)
+    assert spec.enabled
+    with pytest.raises(ValueError):
+        CheckpointSpec(interval=-1)
+    with pytest.raises(ValueError):
+        CheckpointSpec(interval=5, dir=str(tmp_path), keep_last=-2)
+    with pytest.raises(ValueError):
+        CheckpointSpec(interval=5)        # enabled but no dir
+
+
+def test_fingerprint_exempts_engine_shard_rounds():
+    a = config_fingerprint(_cfg(engine="fused"))
+    assert a == config_fingerprint(_cfg(engine="batched"))
+    assert a == config_fingerprint(_cfg(
+        engine="fused", ckpt=CheckpointSpec(interval=3, dir="/tmp/x")))
+    # rounds is only the default horizon length — a resume may extend it
+    assert a == config_fingerprint(_cfg(engine="fused", rounds=99))
+    assert a != config_fingerprint(_cfg(engine="fused", lr=123.0))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint emission
+# ---------------------------------------------------------------------------
+
+def test_run_emits_interval_checkpoints(tmp_path):
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path))
+    sim = IoVSimulator(_cfg("batched", rounds=4, ckpt=ck, local_steps=1))
+    sim.run()
+    assert _ckpts(tmp_path) == ["round_000002.npz", "round_000004.npz"]
+
+
+def test_run_scanned_emits_boundary_checkpoints_and_prunes(tmp_path):
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path), keep_last=2)
+    sim = IoVSimulator(_cfg("fused", rounds=6, ckpt=ck))
+    sim.run_scanned(6)
+    # boundaries at 2, 4, 6; keep_last=2 prunes round 2
+    assert _ckpts(tmp_path) == ["round_000004.npz", "round_000006.npz"]
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume parity (in-process)
+# ---------------------------------------------------------------------------
+
+def _resume_parity(engine, tmp_path, make_cfg, rounds=6, interval=2):
+    """Uninterrupted chunked run vs 'kill' after the first boundary +
+    restore into a FRESH simulator: history must be bit-identical."""
+    d_ref, d_vic = str(tmp_path / "ref"), str(tmp_path / "vic")
+    ref = IoVSimulator(make_cfg(engine, rounds,
+                                CheckpointSpec(interval=interval, dir=d_ref)))
+    ref.run_scanned(rounds)
+
+    vic_ck = CheckpointSpec(interval=interval, dir=d_vic)
+    vic = IoVSimulator(make_cfg(engine, rounds, vic_ck))
+    vic.run_scanned(interval)            # dies after the first boundary
+    del vic                              # the 'kill': all live state gone
+
+    res = IoVSimulator(make_cfg(engine, rounds, vic_ck))
+    done = restore_checkpoint(res)
+    assert done == interval
+    res.run_scanned(rounds - done)
+
+    assert _hist(ref) == _hist(res)
+    assert len(res.history) == rounds
+    # final full-state checkpoints (adapters, UCB stats, RNG cursors)
+    # written at the last boundary must also agree bit-for-bit
+    from repro.checkpoint.io import load_pytree
+    import numpy as np
+    za = load_pytree(latest_checkpoint(d_ref), numpy=True)
+    zb = load_pytree(latest_checkpoint(d_vic), numpy=True)
+    la = jax.tree_util.tree_leaves(za)
+    lb = jax.tree_util.tree_leaves(zb)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kill_and_resume_parity_base_fused(tmp_path):
+    _resume_parity("fused", tmp_path,
+                   lambda e, r, ck: _cfg(e, rounds=r, ckpt=ck))
+
+
+@pytest.mark.slow
+def test_kill_and_resume_parity_dense_rsu(tmp_path):
+    from repro.sim.scenarios import build_config
+
+    def make(engine, rounds, ck):
+        return build_config("dense-rsu", rounds=rounds, seed=1,
+                            engine=engine, num_vehicles=8, num_tasks=2,
+                            checkpoint=ck)
+    _resume_parity("fused", tmp_path, make)
+
+
+def test_restore_rejects_mismatched_config(tmp_path):
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path))
+    sim = IoVSimulator(_cfg("fused", rounds=4, ckpt=ck))
+    sim.run_scanned(2)
+    other = IoVSimulator(_cfg("fused", rounds=4, ckpt=ck, lr=123.0))
+    with pytest.raises(ValueError, match="fingerprint"):
+        restore_checkpoint(other)
+
+
+def test_restore_across_engines(tmp_path):
+    # engine is fingerprint-exempt: a checkpoint written by the fused
+    # engine restores into a batched sim (and vice versa) — the carry is
+    # re-adopted from host state through reset_carry/_init_carry
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path))
+    sim = IoVSimulator(_cfg("fused", rounds=4, ckpt=ck))
+    sim.run_scanned(2)
+    res = IoVSimulator(_cfg("batched", rounds=4, ckpt=ck))
+    assert restore_checkpoint(res) == 2
+    res.run(1)
+    assert len(res.history) == 3
+
+
+def test_save_checkpoint_explicit_dir(tmp_path):
+    sim = IoVSimulator(_cfg("fused", rounds=2))
+    sim.run_scanned(2)
+    path = save_checkpoint(sim, ckpt_dir=str(tmp_path))
+    assert os.path.basename(path) == "round_000002.npz"
+    res = IoVSimulator(_cfg("fused", rounds=2))
+    assert restore_checkpoint(res, str(tmp_path)) == 2
+    assert _hist(res) == _hist(sim)
+
+
+# ---------------------------------------------------------------------------
+# Chunked scan: parity with the monolithic scan + the compile invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chunked_scan_matches_monolithic(tmp_path):
+    mono = IoVSimulator(_cfg("fused", rounds=6))
+    mono.run_scanned(6)
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path))
+    chunk = IoVSimulator(_cfg("fused", rounds=6, ckpt=ck))
+    chunk.run_scanned(6)
+    assert _hist(mono) == _hist(chunk)
+
+
+@pytest.mark.slow
+def test_chunked_scan_compiles_once(tmp_path):
+    """Chunking must not add cache keys: 6 rounds at interval 2 run as
+    three equal chunks that reuse ONE compiled scan program."""
+    compiles = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            msg = record.getMessage()
+            if "Finished XLA compilation of jit(run)" in msg:
+                compiles.append(msg)
+
+    handler = Capture()
+    logger = logging.getLogger("jax._src.dispatch")
+    logger.addHandler(handler)
+    old_level = logger.level
+    logger.setLevel(logging.DEBUG)
+    try:
+        with jax.log_compiles():
+            ck = CheckpointSpec(interval=2, dir=str(tmp_path))
+            sim = IoVSimulator(_cfg("fused", rounds=6, ckpt=ck))
+            sim.run_scanned(6)
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+    assert len(compiles) == 1, compiles
+    assert len(_ckpts(tmp_path)) == 3
