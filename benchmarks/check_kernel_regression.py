@@ -1,0 +1,80 @@
+"""CI regression gate for the kernelized megastep.
+
+Compares a freshly measured BENCH_kernel_megastep*.json against the
+committed baseline and fails (exit 1) when:
+
+  - any dispatch mode's round body compiled more than once per fresh
+    engine in the current run (the kernelized path's traced-operand scale
+    and rank-mask epilogue must add ZERO recompiles), or
+  - the ``direct``-over-``jnp_flash`` speedup regresses more than
+    --tolerance (default 10%) relative to the baseline ratio, or
+  - the kernelized INTERPRET-mode overhead factor (kernelized / direct
+    round time) grows more than --interp-tolerance (default 100%) over
+    the baseline — a loose guard against the interpreter path silently
+    blowing up, not a kernel speed claim (CPU runs the interpreter).
+
+Ratios are compared rather than absolute times so the gate is meaningful
+across heterogeneous CI runners.
+
+Usage:
+    python -m benchmarks.check_kernel_regression \
+        --baseline /tmp/baseline.json \
+        --current benchmarks/results/BENCH_kernel_megastep_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline_path: str, current_path: str, tolerance: float = 0.10,
+          interp_tolerance: float = 1.00) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(current_path) as f:
+        cur = json.load(f)
+
+    ok = True
+    if not cur.get("round_body_compiled_once_all_modes", False):
+        print("FAIL: a dispatch mode compiled its round body more than "
+              "once (or compile guard missing) in the current run")
+        ok = False
+
+    b = base.get("speedups_vs_jnp_flash", {}).get("direct")
+    c = cur.get("speedups_vs_jnp_flash", {}).get("direct")
+    if b is None or c is None:
+        print(f"FAIL: direct speedup missing (baseline={b}, current={c})")
+        ok = False
+    else:
+        floor = (1.0 - tolerance) * float(b)
+        status = "ok" if float(c) >= floor else "REGRESSED"
+        print(f"direct vs jnp_flash: baseline x{b}  current x{c}  "
+              f"floor x{floor:.3f}  [{status}]")
+        if float(c) < floor:
+            ok = False
+
+    bo = base.get("kernelized_interpret_overhead_vs_direct")
+    co = cur.get("kernelized_interpret_overhead_vs_direct")
+    if bo is None or co is None:
+        print(f"FAIL: interpret overhead missing "
+              f"(baseline={bo}, current={co})")
+        ok = False
+    else:
+        ceil = (1.0 + interp_tolerance) * float(bo)
+        status = "ok" if float(co) <= ceil else "REGRESSED"
+        print(f"kernelized interpret overhead: baseline x{bo}  "
+              f"current x{co}  ceiling x{ceil:.3f}  [{status}]")
+        if float(co) > ceil:
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--current", required=True)
+    p.add_argument("--tolerance", type=float, default=0.10)
+    p.add_argument("--interp-tolerance", type=float, default=1.00)
+    a = p.parse_args()
+    sys.exit(check(a.baseline, a.current, a.tolerance, a.interp_tolerance))

@@ -1,5 +1,8 @@
 """Roofline report: renders the §Roofline table from dry-run JSONs
-(benchmarks/results/dryrun/*.json produced by repro.launch.dryrun)."""
+(benchmarks/results/dryrun/*.json produced by repro.launch.dryrun), plus
+an analytic arithmetic-intensity table for the LoRA-targeted linear —
+jnp path vs the fused Pallas GEMM (repro.kernels.lora_matmul) — which
+needs no dry-run artifacts."""
 from __future__ import annotations
 
 import glob
@@ -10,6 +13,62 @@ from typing import Any, Dict, List
 from benchmarks.harness import RESULTS_DIR, emit_csv
 
 DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Kernelized LoRA linear: arithmetic intensity (analytic, no dry run)
+# ---------------------------------------------------------------------------
+
+def lora_linear_intensity(M: int, K: int, N: int, r: int,
+                          dtype_bytes: int = 4) -> Dict[str, Any]:
+    """FLOPs and minimum HBM traffic for y = x·W + scale·((x·A)⊙mask)·B.
+
+    Both routes do the identical 2·M·K·N + 2·M·K·r + 2·M·r·N FLOPs; they
+    differ in traffic. The jnp route materializes the base product and the
+    low-rank product as separate (M, N) tensors and adds them: the x
+    activations are read twice and the (M, N) output surface is written,
+    re-read, and re-written (5·M·N output-surface traffic). The fused
+    kernel computes t = x·A outside (r/N of base cost), then a single
+    Pallas program accumulates x·W in VMEM scratch and applies the masked
+    scale·(t·B) epilogue on the resident tile — x is streamed once and
+    the output surface is written exactly once.
+    """
+    flops = 2 * M * K * N + 2 * M * K * r + 2 * M * r * N
+    small = K * N + K * r + r * N + 2 * M * r      # W, A, B, t traffic
+    jnp_bytes = dtype_bytes * (2 * M * K + small + 5 * M * N)
+    fused_bytes = dtype_bytes * (2 * M * K + small + M * N)
+    return {
+        "flops": flops,
+        "jnp_bytes": jnp_bytes,
+        "fused_bytes": fused_bytes,
+        "jnp_ai": flops / jnp_bytes,
+        "fused_ai": flops / fused_bytes,
+    }
+
+
+def kernel_intensity_table() -> List[Dict[str, Any]]:
+    """AI rows for the backbone's LoRA-targeted linears (vit-base-paper:
+    qkv/o at 768→768 and the FF pair, M = batch·seq prefill tokens) and
+    the fleet-scale variant the CPU benchmarks run."""
+    shapes = [
+        ("vit-base qkv/o", 4 * 200, 768, 768, 8),
+        ("vit-base ff-up", 4 * 200, 768, 3072, 8),
+        ("vit-base ff-down", 4 * 200, 3072, 768, 8),
+        ("vit-base qkv/o r=64", 4 * 200, 768, 768, 64),
+        ("vit-fleet qkv/o", 4 * 24, 32, 32, 8),
+    ]
+    rows = []
+    for name, M, K, N, r in shapes:
+        ai = lora_linear_intensity(M, K, N, r)
+        rows.append({
+            "name": name,
+            "M": M, "K": K, "N": N, "r": r,
+            "gflops": round(ai["flops"] / 1e9, 3),
+            "jnp_ai": round(ai["jnp_ai"], 1),
+            "fused_ai": round(ai["fused_ai"], 1),
+            "ai_gain": round(ai["fused_ai"] / ai["jnp_ai"], 2),
+        })
+    return rows
 
 
 def load_results() -> List[Dict[str, Any]]:
@@ -48,6 +107,17 @@ def summarize(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
 
 
 def main(full: bool = False):
+    # analytic section first: prints regardless of dry-run artifacts
+    ai_rows = kernel_intensity_table()
+    emit_csv("LoRA linear arithmetic intensity (flops/byte): "
+             "jnp path vs fused Pallas GEMM", ai_rows,
+             ["M", "K", "N", "r", "gflops", "jnp_ai", "fused_ai",
+              "ai_gain"])
+    print("# fused_ai = single output write, x streamed once "
+          "(kernels/lora_matmul epilogue); jnp_ai = separate base + "
+          "low-rank products then add")
+    print()
+
     rows = load_results()
     if not rows:
         print("# roofline_report: no dry-run results found in",
@@ -56,7 +126,7 @@ def main(full: bool = False):
               "--arch <a> --shape <s> --json "
               "benchmarks/results/dryrun/<a>_<s>.json")
         print()
-        return []
+        return ai_rows
     table = summarize(rows)
     emit_csv("roofline (per arch×shape×mesh, from dry-run)", table,
              ["status", "mem_gb", "compute_ms", "memory_ms",

@@ -30,16 +30,58 @@ def init_adapter(key, d_in: int, d_out: int, rank: int,
     return {"a": a.astype(dtype), "b": jnp.zeros(sb, dtype)}
 
 
+def split_scale(scale) -> Tuple[Any, Any]:
+    """Normalize the opaque LoRA scale argument.
+
+    The model stack threads `scale` without interpreting it, so callers
+    may pass either a scalar or a ``(scale, rank_mask)`` pair — the fused
+    engine sends the pair when the kernelized route is enabled, extending
+    rank-mask semantics into the kernel epilogue. Returns
+    ``(scalar_scale, rank_mask_or_None)``.
+    """
+    if isinstance(scale, tuple):
+        return scale[0], scale[1]
+    return scale, None
+
+
+def _kernel_route_ok(base: Dict[str, jnp.ndarray], adapter: Adapter) -> bool:
+    # Bias excluded: the plain path computes (x·W + bias) + adapter while
+    # the kernel epilogue would give (x·W + adapter) + bias — different
+    # rounding, so a biased linear would break bit-exact engine parity.
+    return ("b" not in base and base["w"].ndim == 2
+            and adapter["a"].ndim == 2)
+
+
 def apply_lora_linear(base: Dict[str, jnp.ndarray], adapter: Optional[Adapter],
-                      x: jnp.ndarray, scale: float) -> jnp.ndarray:
-    """y = x·W (+bias) + scale·(x·A)·B.  adapter=None → plain linear."""
+                      x: jnp.ndarray, scale) -> jnp.ndarray:
+    """y = x·W (+bias) + scale·(x·A)·B.  adapter=None → plain linear.
+
+    scale: scalar, or ``(scale, rank_mask)`` (see :func:`split_scale`).
+    With ``runmode.USE_PALLAS_LORA`` enabled, unbiased 2-D linears route
+    through the fused Pallas GEMM (one accumulator tile, no second HBM
+    read of x); everything else falls back to the jnp expression below,
+    which is the kernel's bit-exactness oracle under jit.
+    """
+    scale, rank_mask = split_scale(scale)
+    if adapter is not None:
+        from repro.models import runmode
+        if runmode.lora_kernel_enabled() and _kernel_route_ok(base, adapter):
+            from repro.kernels.lora_matmul import lora_matmul
+            return lora_matmul(
+                x, base["w"], adapter["a"], adapter["b"],
+                scale=scale, rank_mask=rank_mask,
+                interpret=runmode.lora_kernel_interpret(),
+                use_kernel=not runmode.lora_kernel_oracle())
     y = x @ base["w"]
     if "b" in base:
         y = y + base["b"]
     if adapter is not None:
         # adapters are kept in f32 (they are trained); compute the low-rank
         # path in f32 and cast back to the base compute dtype
-        lo = (x.astype(adapter["a"].dtype) @ adapter["a"]) @ adapter["b"]
+        lo1 = x.astype(adapter["a"].dtype) @ adapter["a"]
+        if rank_mask is not None:
+            lo1 = lo1 * rank_mask
+        lo = lo1 @ adapter["b"]
         y = y + (scale * lo).astype(y.dtype)
     return y
 

@@ -607,6 +607,17 @@ class FusedRoundEngine:
             scale_v = self.alpha / jnp.maximum(
                 ranks.astype(jnp.float32), 1.0)
             rmask = lora_lib.rank_arange_mask(ranks, self.Rmax)
+            # Kernelized route: thread (scale, rank_mask) per vehicle so the
+            # fused GEMM's epilogue masks the rank tail on-device. Read at
+            # TRACE time (like USE_PALLAS_ATTN) — flip runmode before the
+            # first round; later flips don't retrace a compiled round body.
+            # The mask multiply is a bitwise no-op on the pre-masked
+            # adapters, so this is parity-neutral on the jnp fallback too.
+            from repro.models import runmode
+            if runmode.lora_kernel_enabled():
+                scale_arg = (scale_v, rmask)
+            else:
+                scale_arg = scale_v
 
             # 2. adapter distribution: shared seeded SVD of the merged
             #    delta, truncated per vehicle by rank mask — or the staged
@@ -627,9 +638,9 @@ class FusedRoundEngine:
 
             # 3. fleet megastep: local fine-tuning + held-out local eval
             new_ads = self._constrain(self._train_fleet(
-                params, dist, scale_v, x["tokens"][ti], x["labels"][ti],
+                params, dist, scale_arg, x["tokens"][ti], x["labels"][ti],
                 x["counts"][ti]))
-            local_acc = self._eval_fleet(params, new_ads, scale_v,
+            local_acc = self._eval_fleet(params, new_ads, scale_arg,
                                          self.local_eval[ti])
 
             # 4. §III-C four-stage costs over the staged channel

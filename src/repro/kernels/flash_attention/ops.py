@@ -87,12 +87,25 @@ _fa.defvjp(_fa_fwd, _fa_bwd)
 @functools.partial(jax.jit, static_argnames=(
     "causal", "sliding_window", "sm_scale", "block_q", "block_k",
     "interpret"))
+def _fa_jit(q, k, v, causal, sliding_window, sm_scale, block_q, block_k,
+            interpret):
+    return _fa(q, k, v, causal, sliding_window, sm_scale, block_q, block_k,
+               interpret)
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True,
                     sliding_window: Optional[int] = None,
                     sm_scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False) -> jnp.ndarray:
-    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) → (B, Sq, H, D)."""
-    return _fa(q, k, v, causal, sliding_window, sm_scale, block_q, block_k,
-               interpret)
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) → (B, Sq, H, D).
+
+    interpret=None autodetects from the backend: compiled on TPU hosts,
+    Pallas interpreter elsewhere (the CPU/GPU validation path).
+    """
+    if interpret is None:
+        from repro.models import runmode
+        interpret = runmode.lora_kernel_interpret()
+    return _fa_jit(q, k, v, causal, sliding_window, sm_scale, block_q,
+                   block_k, bool(interpret))

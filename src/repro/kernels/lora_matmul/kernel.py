@@ -1,4 +1,4 @@
-"""Fused base+adapter GEMM: y = x·W + scale·t·B with t = x·A precomputed.
+"""Fused base+adapter GEMM: y = x·W + scale·(t⊙mask)·B with t = x·A.
 
 Why fused (DESIGN.md §6): during LoRA fine-tuning every targeted linear
 evaluates base GEMM *plus* adapter path. Done naively that is a second
@@ -7,6 +7,18 @@ Here the adapter contribution is added into the same VMEM accumulator tile
 as the base GEMM's k-loop epilogue — one output write, no extra HBM round
 trip. t = x·A is O(M·K·r), r ≤ 64 ≪ N, computed once by the wrapper (its
 cost is ~r/N of the base GEMM).
+
+Two operands beyond the GEMM inputs:
+  scale — shape (1,) f32 in SMEM, read as a scalar in the epilogue. Traced,
+          not baked into the kernel: the fused round engine threads
+          *per-vehicle dynamic* scales (alpha/rank), so a static scale
+          would recompile per distinct value and break the one-compile
+          round-body contract.
+  mask  — shape (1, r) f32 rank mask (rank_arange_mask row). The epilogue
+          computes (t⊙mask)·B, extending the rank-padding invariant into
+          the kernel: a rank-r vehicle under max_rank padding produces
+          bit-identical output to the truncated adapter, because masked
+          tail lanes contribute exact ±0 rows to the adapter dot.
 
 Tiling: grid (M/bm, N/bn, K/bk), k innermost/sequential, f32 VMEM scratch
 accumulator of (bm, bn); all tile dims 128-aligned for the MXU.
@@ -26,8 +38,8 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _lora_mm_kernel(x_ref, w_ref, t_ref, b_ref, o_ref, acc_scr, *,
-                    scale: float, nk: int):
+def _lora_mm_kernel(x_ref, w_ref, t_ref, b_ref, m_ref, s_ref, o_ref,
+                    acc_scr, *, nk: int):
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
@@ -41,20 +53,21 @@ def _lora_mm_kernel(x_ref, w_ref, t_ref, b_ref, o_ref, acc_scr, *,
 
     @pl.when(kj == nk - 1)
     def _finish():
-        t = t_ref[...].astype(jnp.float32)       # (bm, r)
-        bb = b_ref[...].astype(jnp.float32)      # (r, bn)
+        t = (t_ref[...] * m_ref[...]).astype(jnp.float32)   # (bm, r)
+        bb = b_ref[...].astype(jnp.float32)                 # (r, bn)
         adapter = jax.lax.dot_general(
             t, bb, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        o_ref[...] = (acc_scr[...] + scale * adapter).astype(o_ref.dtype)
+        o_ref[...] = (acc_scr[...] + s_ref[0] * adapter).astype(o_ref.dtype)
 
 
 def lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray,
-                       b: jnp.ndarray, *, scale: float,
+                       b: jnp.ndarray, mask: jnp.ndarray,
+                       scale: jnp.ndarray, *,
                        block_m: int = 128, block_n: int = 128,
                        block_k: int = 512,
                        interpret: bool = False) -> jnp.ndarray:
-    """x:(M,K) w:(K,N) t=(x·A):(M,r) b:(r,N) → (M,N)."""
+    """x:(M,K) w:(K,N) t=(x·A):(M,r) b:(r,N) mask:(1,r) scale:(1,) → (M,N)."""
     M, K = x.shape
     N = w.shape[1]
     r = t.shape[1]
@@ -62,7 +75,7 @@ def lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray,
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     nm, nn, nk = M // bm, N // bn, K // bk
 
-    kernel = functools.partial(_lora_mm_kernel, scale=scale, nk=nk)
+    kernel = functools.partial(_lora_mm_kernel, nk=nk)
     return pl.pallas_call(
         kernel,
         grid=(nm, nn, nk),
@@ -71,6 +84,8 @@ def lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray,
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bm, r), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, r), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
@@ -78,4 +93,4 @@ def lora_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w, t, b)
+    )(x, w, t, b, mask, scale)

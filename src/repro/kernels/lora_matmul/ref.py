@@ -5,6 +5,10 @@ import jax.numpy as jnp
 
 
 def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
-                    b: jnp.ndarray, scale: float) -> jnp.ndarray:
-    """y = x·W + scale·(x·A)·B.  x:(M,K) w:(K,N) a:(K,r) b:(r,N)."""
-    return (x @ w + scale * ((x @ a) @ b)).astype(x.dtype)
+                    b: jnp.ndarray, scale: float,
+                    rank_mask=None) -> jnp.ndarray:
+    """y = x·W + scale·((x·A)⊙mask)·B.  x:(M,K) w:(K,N) a:(K,r) b:(r,N)."""
+    t = x @ a
+    if rank_mask is not None:
+        t = t * rank_mask
+    return (x @ w + scale * (t @ b)).astype(x.dtype)

@@ -147,6 +147,12 @@ def main():
     parser.add_argument("--lr", type=float, default=1e-3)
     parser.add_argument("--full", action="store_true",
                         help="use the full (not reduced) config")
+    parser.add_argument("--pallas", choices=("off", "auto", "on"),
+                        default="off",
+                        help="kernelized LoRA GEMM + flash attention "
+                             "dispatch: off = jnp paths, auto = compiled "
+                             "kernels iff running on TPU, on = force "
+                             "(interpret mode off-TPU — validation only)")
     parser.add_argument("--checkpoint-every", type=int, default=0,
                         help="checkpoint adapters/optimizer every N steps "
                              "(0 = off; needs --checkpoint-dir)")
@@ -158,6 +164,13 @@ def main():
     args = parser.parse_args()
     if (args.checkpoint_every > 0 or args.resume) and not args.checkpoint_dir:
         parser.error("--checkpoint-every/--resume need --checkpoint-dir")
+
+    if args.pallas != "off":
+        from repro.models import runmode
+        v = True if args.pallas == "on" else "auto"
+        runmode.set_pallas_lora(v, interpret=runmode.lora_kernel_interpret())
+        runmode.set_pallas_attn(runmode.lora_kernel_enabled(),
+                                interpret=runmode.lora_kernel_interpret())
 
     if args.full:
         from repro.config import get_arch

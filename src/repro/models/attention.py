@@ -167,6 +167,28 @@ def _decode_attend(q, k, v, q_positions, kv_positions, sliding_window,
     return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
 
 
+def attention_path(*, causal: bool, Sq: int, Sk: int, cap: float = 0.0,
+                   hd_k: Optional[int] = None,
+                   hd_v: Optional[int] = None) -> str:
+    """Which route :func:`attend` takes, in precedence order — the live
+    half of the dispatch table in DESIGN.md §6.
+
+    'decode'       — Sq==1 causal with FAST_DECODE: direct cache attention
+    'pallas_flash' — USE_PALLAS_ATTN and the aligned causal train case
+    'direct'       — short sequences under DIRECT_ATTN_MAX_SEQ
+    'jnp_flash'    — blocked online-softmax jnp fallback
+    """
+    from repro.models import runmode
+    if Sq == 1 and causal and runmode.FAST_DECODE:
+        return "decode"
+    if (runmode.USE_PALLAS_ATTN and causal and Sq == Sk and cap == 0.0
+            and (hd_k is None or hd_k == hd_v)):
+        return "pallas_flash"
+    if Sq > 1 and max(Sq, Sk) <= runmode.DIRECT_ATTN_MAX_SEQ:
+        return "direct"
+    return "jnp_flash"
+
+
 def attend(q, k, v, *, causal: bool, q_positions, kv_positions=None,
            sliding_window: Optional[int] = None, sm_scale=None, cap=0.0):
     """Generic attention. q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd).
@@ -181,11 +203,12 @@ def attend(q, k, v, *, causal: bool, q_positions, kv_positions=None,
         sm_scale = 1.0 / math.sqrt(hd)
     if kv_positions is None:
         kv_positions = jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk))
-    if Sq == 1 and causal and runmode.FAST_DECODE:
+    path = attention_path(causal=causal, Sq=Sq, Sk=Sk, cap=cap,
+                          hd_k=k.shape[-1], hd_v=v.shape[-1])
+    if path == "decode":
         return _decode_attend(q, k, v, q_positions, kv_positions,
                               sliding_window, sm_scale, cap)
-    if (runmode.USE_PALLAS_ATTN and causal and Sq == Sk and cap == 0.0
-            and k.shape[-1] == v.shape[-1]):
+    if path == "pallas_flash":
         # Pallas flash kernel (train/prefill, standard aligned case; MLA's
         # split K/V head dims and softcapped archs use the jnp path)
         from repro.kernels.flash_attention.ops import flash_attention
@@ -193,7 +216,7 @@ def attend(q, k, v, *, causal: bool, q_positions, kv_positions=None,
                                sliding_window=sliding_window,
                                sm_scale=sm_scale,
                                interpret=runmode.PALLAS_INTERPRET)
-    if Sq > 1 and max(Sq, Sk) <= runmode.DIRECT_ATTN_MAX_SEQ:
+    if path == "direct":
         # short sequences: materializing the (Sq,Sk) scores is cheap, and
         # the blocked online-softmax machinery below (scan + per-block
         # checkpoint recompute) costs far more than it saves — on the CPU

@@ -80,6 +80,11 @@ def apply_moe(p, adapters, x, cfg: ModelConfig, lora_scale: float
     f = m.expert_d_ff or cfg.d_ff
     act = activation_fn(cfg.activation)
     ad = adapters or {}
+    # MoE multiplies lora_scale numerically (unlike the linear stack, which
+    # threads it opaquely), so unpack a possible (scale, rank_mask) pair.
+    scale_arg = lora_scale
+    from repro.core.lora import split_scale
+    lora_scale, rank_mask = split_scale(lora_scale)
 
     xf = x.reshape(T, d)
     logits = (xf @ p["router"]["w"]).astype(jnp.float32)      # (T, E)
@@ -103,6 +108,8 @@ def apply_moe(p, adapters, x, cfg: ModelConfig, lora_scale: float
         a = ad.get(a_key)
         if a is not None:
             lo = jnp.einsum(pat.replace("f", "r"), h, a["a"])
+            if rank_mask is not None:
+                lo = lo * rank_mask
             y = y + lora_scale * jnp.einsum("ecr,erf->ecf", lo, a["b"])
         return y
 
@@ -116,6 +123,8 @@ def apply_moe(p, adapters, x, cfg: ModelConfig, lora_scale: float
     a = ad.get("w_down")
     if a is not None:
         lo = jnp.einsum("ecf,efr->ecr", h, a["a"])
+        if rank_mask is not None:
+            lo = lo * rank_mask
         out_e = out_e + lora_scale * jnp.einsum("ecr,erd->ecd", lo, a["b"])
 
     # gather back to assignment order, weight, combine per token
@@ -128,7 +137,7 @@ def apply_moe(p, adapters, x, cfg: ModelConfig, lora_scale: float
     # shared experts run densely for every token
     if "shared" in p:
         out = out + apply_mlp(p["shared"], ad.get("shared"),
-                              xf, cfg.activation, lora_scale)
+                              xf, cfg.activation, scale_arg)
 
     # switch-transformer load balance loss
     me = jnp.mean(probs, axis=0)                               # (E,)

@@ -69,6 +69,10 @@ def apply_moe_sharded(p, adapters, x, cfg: ModelConfig, lora_scale: float,
     msize = mesh.shape["model"]
     expert_parallel = (E % msize == 0)
     ad = adapters or {}
+    # lora_scale is multiplied numerically here; accept (scale, rank_mask)
+    scale_arg = lora_scale
+    from repro.core.lora import split_scale
+    lora_scale, rank_mask = split_scale(lora_scale)
     a_up = ad.get("w_up")
     a_dn = ad.get("w_down")
     has_lora = a_up is not None
@@ -103,6 +107,8 @@ def apply_moe_sharded(p, adapters, x, cfg: ModelConfig, lora_scale: float,
         h = jnp.einsum("ecd,edf->ecf", buf, w_up)
         if la_up is not None:
             lo = jnp.einsum("ecd,edr->ecr", buf, la_up)
+            if rank_mask is not None:
+                lo = lo * rank_mask
             h = h + lora_scale * jnp.einsum("ecr,erf->ecf", lo, lb_up)
         if w_gate is not None:
             h = act(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * h
@@ -111,6 +117,8 @@ def apply_moe_sharded(p, adapters, x, cfg: ModelConfig, lora_scale: float,
         out_e = jnp.einsum("ecf,efd->ecd", h, w_down)
         if la_dn is not None:
             lo = jnp.einsum("ecf,efr->ecr", h, la_dn)
+            if rank_mask is not None:
+                lo = lo * rank_mask
             out_e = out_e + lora_scale * jnp.einsum("ecr,erd->ecd", lo,
                                                     lb_dn)
         return out_e
@@ -205,5 +213,5 @@ def apply_moe_sharded(p, adapters, x, cfg: ModelConfig, lora_scale: float,
 
     if "shared" in p:
         out = out + apply_mlp(p["shared"], ad.get("shared"), x,
-                              cfg.activation, lora_scale)
+                              cfg.activation, scale_arg)
     return out, aux

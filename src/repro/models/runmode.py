@@ -22,6 +22,58 @@ def set_pallas_attn(v: bool, interpret: bool = True) -> None:
     PALLAS_INTERPRET = bool(interpret)
 
 
+# USE_PALLAS_LORA: route every LoRA-targeted linear through the fused
+# base+adapter Pallas GEMM (repro.kernels.lora_matmul) — one output write,
+# no second HBM read of the activations (DESIGN.md §6). States:
+#   False    — pure-jnp path everywhere (default; bit-stable baseline)
+#   True     — kernelized path (interpret per PALLAS_INTERPRET off-TPU)
+#   "auto"   — backend autodetect: compiled kernel on TPU hosts, jnp
+#              elsewhere (the interpret-mode kernel is a validation tool,
+#              not a CPU fast path)
+#   "oracle" — same dispatch and custom_vjp as True but the forward is the
+#              jnp expression: the bit-exactness reference for the kernel
+# The fused round engine reads this at trace time (like USE_PALLAS_ATTN):
+# set it BEFORE the first round runs; later flips do not retrace an
+# already-compiled round program.
+USE_PALLAS_LORA = False
+
+
+def kernel_backend() -> str:
+    """The backend Pallas kernels would execute on ('tpu', 'cpu', 'gpu')."""
+    import jax
+    return jax.default_backend()
+
+
+def set_pallas_lora(v, interpret: bool = True) -> None:
+    """Enable the kernelized LoRA linear.
+    v: False | True | "auto" | "oracle"."""
+    global USE_PALLAS_LORA, PALLAS_INTERPRET
+    if v not in (False, True, "auto", "oracle"):
+        raise ValueError(f"USE_PALLAS_LORA must be False/True/'auto'/"
+                         f"'oracle', got {v!r}")
+    USE_PALLAS_LORA = v
+    if v:
+        PALLAS_INTERPRET = bool(interpret)
+
+
+def lora_kernel_enabled() -> bool:
+    if USE_PALLAS_LORA == "auto":
+        return kernel_backend() == "tpu"
+    return bool(USE_PALLAS_LORA)
+
+
+def lora_kernel_oracle() -> bool:
+    return USE_PALLAS_LORA == "oracle"
+
+
+def lora_kernel_interpret() -> bool:
+    """TPU hosts always run the compiled kernel; everywhere else the
+    kernelized path is only available through the Pallas interpreter."""
+    if kernel_backend() == "tpu":
+        return False
+    return bool(PALLAS_INTERPRET)
+
+
 # Expert-parallel MoE via shard_map (§Perf: the automatic-partitioner
 # scatter dispatch replicates the token buffer — moe_sharded.py). Set by
 # the launch factories; None → pure-pjit path (single-device smoke tests).
@@ -68,3 +120,34 @@ def set_direct_attn_max_seq(n: int) -> None:
 
 def inner_unroll(n_trips: int) -> int:
     return n_trips if COST_UNROLL else 1
+
+
+import contextlib as _contextlib
+
+
+@_contextlib.contextmanager
+def overrides(**kw):
+    """Temporarily set run-mode globals, restoring them on exit.
+
+    Keys are the UPPERCASE module globals (USE_PALLAS_ATTN,
+    USE_PALLAS_LORA, PALLAS_INTERPRET, DIRECT_ATTN_MAX_SEQ, ...).
+    Restoration runs even when the body raises, so a failing test cannot
+    leak kernel dispatch state into the rest of the suite.
+
+        with runmode.overrides(USE_PALLAS_ATTN=True, PALLAS_INTERPRET=True):
+            ...
+
+    Only takes effect for traces entered inside the block: the fused
+    engines read these globals at trace time, so an engine compiled
+    outside the block keeps its original dispatch.
+    """
+    g = globals()
+    unknown = [k for k in kw if k not in g or not k.isupper()]
+    if unknown:
+        raise ValueError(f"unknown runmode override(s): {unknown}")
+    saved = {k: g[k] for k in kw}
+    try:
+        g.update(kw)
+        yield
+    finally:
+        g.update(saved)

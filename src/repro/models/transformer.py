@@ -329,7 +329,9 @@ def forward_hidden(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
 
     scale: optional override of lora.scale. May be a traced scalar — the
     fused round engine passes a per-vehicle α/η under vmap so one compiled
-    program covers every candidate rank."""
+    program covers every candidate rank — or a (scale, rank_mask) pair
+    (see core.lora.split_scale) when the kernelized LoRA route is on, so
+    the fused GEMM masks the rank tail in its epilogue."""
     scale = lora.scale if scale is None else scale
     x, _ = _embed(params, cfg, batch)
     B, S, _ = x.shape

@@ -103,6 +103,94 @@ def test_lora_matmul_batched_leading_dims():
     assert jnp.allclose(y, yr, atol=1e-4)
 
 
+def _lm_operands(M=32, K=32, N=16, r=8):
+    ks = jax.random.split(KEY, 4)
+    return (jax.random.normal(ks[0], (M, K)),
+            jax.random.normal(ks[1], (K, N)),
+            jax.random.normal(ks[2], (K, r)) * 0.1,
+            jax.random.normal(ks[3], (r, N)) * 0.1)
+
+
+def test_lora_matmul_one_compile_across_scales():
+    """scale is a traced operand (SMEM): sweeping distinct scales — the
+    fused engine threads per-vehicle α/r — must reuse ONE executable."""
+    import logging
+
+    x, w, a, b = _lm_operands()
+    compiles = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            msg = record.getMessage()
+            if "Finished XLA compilation of jit(lora_matmul)" in msg:
+                compiles.append(msg)
+
+    handler = Capture()
+    logger = logging.getLogger("jax._src.dispatch")
+    logger.addHandler(handler)
+    prev = logger.level
+    logger.setLevel(logging.DEBUG)
+    try:
+        with jax.log_compiles():
+            for s in (0.25, 1.0, 2.0, 3.5):
+                lora_matmul(x, w, a, b, scale=s, block_m=16, block_n=16,
+                            block_k=16, interpret=True).block_until_ready()
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(prev)
+    assert len(compiles) == 1, (
+        f"scale sweep recompiled lora_matmul {len(compiles)}×")
+
+
+def test_lora_matmul_rank_mask_equals_truncated():
+    """Masked rank tail inside the kernel epilogue == truncating the
+    adapter to rank r before the call, bit for bit (rank-padding invariant
+    extended on-device; compare jit-vs-jit)."""
+    from repro.core.lora import rank_arange_mask
+
+    x, w, a, b = _lm_operands(r=8)
+    for r in (2, 4, 8):
+        mask = rank_arange_mask(jnp.int32(r), 8)
+        # pre-mask the adapter like the engine does (tails exactly ±0)
+        am, bm = a * mask, b * mask[:, None]
+        y_mask = lora_matmul(x, w, am, bm, scale=1.5, rank_mask=mask,
+                             block_m=16, block_n=16, block_k=16,
+                             interpret=True)
+        y_trunc = lora_matmul(x, w, a[:, :r], b[:r, :], scale=1.5,
+                              block_m=16, block_n=16, block_k=16,
+                              interpret=True)
+        assert bool(jnp.all(y_mask == y_trunc)), r
+
+
+def test_lora_matmul_grads_match_jnp_path():
+    """custom_vjp backward (jnp oracle) == plain autodiff of the jnp
+    expression, bit for bit under jit (the engine differentiates only the
+    adapters; x/w cotangents also checked).
+
+    block_k covers K in one tile: splitting the k loop reassociates the
+    base GEMM's accumulation, which shifts the forward (and hence the
+    loss cotangent) by float-noise — the engine runs block_k=512 ≥ K on
+    every CPU-parity arch, so the unsplit case is the one that matters."""
+    x, w, a, b = _lm_operands()
+    scale = jnp.float32(2.0)
+
+    def loss_k(x, a, b):
+        y = lora_matmul(x, w, a, b, scale=scale, block_m=16, block_n=16,
+                        block_k=32, interpret=True)
+        return jnp.sum(y * y)
+
+    @jax.jit
+    def loss_j(x, a, b):
+        t = x.astype(a.dtype) @ a
+        y = x @ w + (scale * (t @ b)).astype(x.dtype)
+        return jnp.sum(y * y)
+
+    gk = jax.jit(jax.grad(loss_k, argnums=(0, 1, 2)))(x, a, b)
+    gj = jax.jit(jax.grad(loss_j, argnums=(0, 1, 2)))(x, a, b)
+    for got, ref in zip(gk, gj):
+        assert bool(jnp.all(got == ref))
+
+
 # ---------------------------------------------------------------------------
 # WKV6
 # ---------------------------------------------------------------------------

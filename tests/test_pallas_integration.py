@@ -20,13 +20,9 @@ def test_forward_matches_with_pallas_attention(arch, rng_key):
     # seq length multiple-of-8 within one kernel block
     toks = jax.random.randint(rng_key, (2, 32), 0, cfg.vocab_size)
     batch = {"tokens": toks}
-    try:
-        runmode.set_pallas_attn(False)
-        ref, _ = T.forward(params, None, cfg, lora, batch)
-        runmode.set_pallas_attn(True, interpret=True)
+    ref, _ = T.forward(params, None, cfg, lora, batch)
+    with runmode.overrides(USE_PALLAS_ATTN=True, PALLAS_INTERPRET=True):
         out, _ = T.forward(params, None, cfg, lora, batch)
-    finally:
-        runmode.set_pallas_attn(False)
     pr = jax.nn.softmax(ref, axis=-1)
     po = jax.nn.softmax(out, axis=-1)
     err = float(jnp.max(jnp.abs(pr - po)))
@@ -41,12 +37,9 @@ def test_pallas_attention_grads_flow(rng_key):
     adapters = T.init_adapters(rng_key, cfg, lora, rank=4)
     toks = jax.random.randint(rng_key, (2, 16), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": (toks * 5 + 2) % cfg.vocab_size}
-    try:
-        runmode.set_pallas_attn(True, interpret=True)
+    with runmode.overrides(USE_PALLAS_ATTN=True, PALLAS_INTERPRET=True):
         g = jax.grad(lambda ad: T.loss_fn(params, ad, cfg, lora, batch)[0]
                      )(adapters)
-    finally:
-        runmode.set_pallas_attn(False)
     leaves = jax.tree_util.tree_leaves(g)
     assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
     assert max(float(jnp.max(jnp.abs(x))) for x in leaves) > 0.0
