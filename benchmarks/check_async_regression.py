@@ -1,0 +1,76 @@
+"""CI regression gate for the async participation sweep.
+
+Compares a freshly measured BENCH_async_participation*.json against the
+committed baseline and fails (exit 1) when:
+
+  - a (scenario, policy) cell present in the baseline is missing from the
+    fresh run,
+  - a cell's best_accuracy drops more than --tolerance (absolute) below
+    the baseline (sync rows are additionally a drift canary: the sync
+    policy is pinned bit-exact to the pre-participation engine, so any
+    sync movement beyond float noise means the static participation
+    branch regressed), or
+  - a semi_sync cell that buffered deferrals in the baseline buffered
+    none in the fresh run (the in-flight buffer silently stopped firing).
+
+Accuracies on these tiny smoke models are coarse, so the default
+tolerance is loose; the structural checks (cells present, buffer fires)
+are the teeth.
+
+Usage:
+    python -m benchmarks.check_async_regression \
+        --baseline benchmarks/results/BENCH_async_participation_smoke.json \
+        --current /tmp/BENCH_async_participation_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cells(payload):
+    return {(r["scenario"], r["policy"]): r
+            for r in payload.get("results", [])}
+
+
+def check(baseline_path: str, current_path: str,
+          tolerance: float = 0.05) -> int:
+    with open(baseline_path) as f:
+        base = _cells(json.load(f))
+    with open(current_path) as f:
+        cur = _cells(json.load(f))
+
+    ok = True
+    for key, b in sorted(base.items()):
+        scenario, policy = key
+        c = cur.get(key)
+        if c is None:
+            print(f"FAIL: cell {scenario}/{policy} missing from current run")
+            ok = False
+            continue
+
+        b_acc, c_acc = float(b["best_accuracy"]), float(c["best_accuracy"])
+        floor = b_acc - tolerance
+        status = "ok" if c_acc >= floor else "REGRESSED"
+        print(f"{scenario}/{policy}: baseline acc={b_acc:.4f}  "
+              f"current acc={c_acc:.4f}  floor {floor:.4f}  [{status}]")
+        if c_acc < floor:
+            ok = False
+
+        if policy == "semi_sync" and int(b.get("buffer_deferred", 0)) > 0:
+            if int(c.get("buffer_deferred", 0)) <= 0:
+                print(f"FAIL: {scenario}/semi_sync buffered deferrals in the "
+                      f"baseline ({b['buffer_deferred']}) but none now — "
+                      f"in-flight buffer stopped firing")
+                ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--current", required=True)
+    p.add_argument("--tolerance", type=float, default=0.05)
+    a = p.parse_args()
+    sys.exit(check(a.baseline, a.current, a.tolerance))

@@ -46,7 +46,10 @@ from repro.core.energy_alloc import AllocState
 from repro.core.ucb_dual import UCBDualState
 from repro.checkpoint.io import prune_checkpoints, restore_round, save_round
 
-_VERSION = 1
+# v2: adds the per-server semi-synchronous participation buffer (in-flight
+# uploads with weight/age/destination). v1 files predate the participation
+# policy layer and cannot express it — they are rejected on restore.
+_VERSION = 2
 # the knobs a resume is allowed to change: execution topology and the
 # checkpoint policy never alter the simulated trajectory, and `rounds` is
 # only the default horizon length (run()/run_scanned consume it nowhere
@@ -72,6 +75,39 @@ def _gen_state(rng: np.random.Generator) -> Dict[str, Any]:
 
 def _to_jnp(tree):
     return None if tree is None else tree_map(jnp.asarray, tree)
+
+
+def _buffer_state(srv) -> Dict[str, Any]:
+    """Serialize the server's semi-sync in-flight upload buffer (v2):
+    lane ids in sorted order plus parallel weight/age/dest arrays and the
+    lane-stacked delta trees. An empty buffer (every sync run) writes the
+    empty arrays and no delta tree."""
+    lanes = sorted(srv.buffer)
+    out: Dict[str, Any] = {
+        "lanes": np.asarray(lanes, np.int64),
+        "w": np.asarray([srv.buffer[v]["w"] for v in lanes], np.float64),
+        "age": np.asarray([srv.buffer[v]["age"] for v in lanes], np.int64),
+        "dest": np.asarray([srv.buffer[v]["dest"] for v in lanes],
+                           np.int64),
+        "delta": None,
+    }
+    if lanes:
+        out["delta"] = tree_map(
+            lambda *xs: np.stack([np.asarray(x, np.float32) for x in xs]),
+            *[srv.buffer[v]["delta"] for v in lanes])
+    return out
+
+
+def _restore_buffer(srv, bd: Dict[str, Any]) -> None:
+    srv.buffer = {}
+    lanes = np.asarray(bd["lanes"], np.int64)
+    for i, v in enumerate(lanes):
+        srv.buffer[int(v)] = {
+            "delta": _to_jnp(tree_map(lambda x: x[i], bd["delta"])),
+            "w": float(bd["w"][i]),
+            "age": int(bd["age"][i]),
+            "dest": int(bd["dest"][i]),
+        }
 
 
 def host_state(sim) -> Dict[str, Any]:
@@ -111,6 +147,7 @@ def host_state(sim) -> Dict[str, Any]:
             "partials": srv.partials,
             "partial_w": np.asarray(srv.partial_w),
             "partial_age": np.asarray(srv.partial_age),
+            "buffer": _buffer_state(srv),
         } for srv in sim.servers],
         "mobility": {
             "tick": np.int64(m.tick),
@@ -181,8 +218,11 @@ def restore_checkpoint(sim, ckpt_dir: Optional[str] = None,
     round_idx, state = restore_round(ckpt_dir, round_idx, numpy=True)
     meta = json.loads(bytes(state["meta"]).decode())
     if meta.get("version") != _VERSION:
-        raise ValueError(f"checkpoint version {meta.get('version')!r} != "
-                         f"supported version {_VERSION}")
+        raise ValueError(
+            f"checkpoint version {meta.get('version')!r} != supported "
+            f"version {_VERSION} — v2 added the semi-synchronous "
+            "participation buffer (ParticipationSpec); older checkpoints "
+            "cannot express in-flight uploads and must be regenerated")
     want = config_fingerprint(sim.cfg)
     if meta["fingerprint"] != want:
         raise ValueError(
@@ -210,6 +250,7 @@ def restore_checkpoint(sim, ckpt_dir: Optional[str] = None,
                         else [_to_jnp(p) for p in sd["partials"]])
         srv.partial_w = np.asarray(sd["partial_w"], np.float64).copy()
         srv.partial_age = np.asarray(sd["partial_age"], np.int64).copy()
+        _restore_buffer(srv, sd["buffer"])
 
     md = state["mobility"]
     m = sim.mobility

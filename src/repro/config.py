@@ -331,6 +331,75 @@ class RSUTierSpec:
 
 
 @dataclass(frozen=True)
+class ParticipationSpec:
+    """When a vehicle's upload lands: the round-participation policy
+    (DESIGN.md §8).
+
+    ``mode="sync"`` (the default) is strict round synchrony — a vehicle
+    that cannot upload this round (coverage exit, departure, abandon
+    fallback) contributes nothing, exactly the pre-policy semantics; the
+    sync path is regression-pinned bit-exact on every engine.
+
+    ``mode="semi_sync"`` buffers the upload instead of dropping it: the
+    vehicle's trained delta (rank-padded, so the one-compile contract
+    holds) rides an in-flight buffer — one lane per vehicle carrying
+    (delta tree, data weight, age, destination RSU) — and lands k rounds
+    late, when the vehicle regains coverage, at a staleness-discounted
+    weight ``w · vehicle_staleness_decay**k``. A buffered upload older
+    than ``max_delay`` rounds is dropped. With ``buffer_handoffs`` the
+    buffered partial follows the vehicle across RSU associations (it
+    lands at the vehicle's CURRENT RSU); without it the partial stays
+    addressed to the RSU that trained it.
+
+    ``max_delay=0`` makes semi_sync degenerate to sync bit-exactly: a
+    buffered upload is at least one round old by its first release
+    opportunity, so nothing is ever released (property-tested).
+    """
+    mode: str = "sync"
+    # rounds a buffered upload may wait before it is dropped
+    max_delay: int = 3
+    # per-round discount of a buffered upload's weight (decay**age);
+    # 1.0 disables the discount
+    vehicle_staleness_decay: float = 0.6
+    # late uploads land at the vehicle's current RSU (partial follows the
+    # vehicle across handoffs) instead of the RSU that trained them
+    buffer_handoffs: bool = True
+
+    @property
+    def trivial(self) -> bool:
+        """Strict synchrony — the pre-policy semantics (and the bit-exact
+        regression contract on every engine)."""
+        return self.mode == "sync"
+
+    def __post_init__(self):
+        if self.mode not in ("sync", "semi_sync"):
+            raise ValueError("mode must be 'sync' or 'semi_sync', got "
+                             f"{self.mode!r}")
+        if self.max_delay < 0:
+            raise ValueError("max_delay must be >= 0")
+        if not 0.0 < self.vehicle_staleness_decay <= 1.0:
+            raise ValueError("vehicle_staleness_decay must be in (0, 1]")
+
+    @classmethod
+    def of(cls, value) -> "ParticipationSpec":
+        """Coerce CLI/preset sugar to a spec: an existing spec passes
+        through; ``"sync"`` / ``"semi-sync"`` / ``"semi_sync"`` build one
+        with default delay/decay knobs."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            name = value.replace("-", "_")
+            if name == "sync":
+                return cls()
+            if name == "semi_sync":
+                return cls(mode="semi_sync")
+            raise ValueError(f"unknown participation mode {value!r} "
+                             "(want 'sync' or 'semi-sync')")
+        raise TypeError("participation must be a ParticipationSpec or a "
+                        f"mode string, got {type(value).__name__}")
+
+
+@dataclass(frozen=True)
 class ShardSpec:
     """Fleet-axis device sharding for the fused round engine (DESIGN.md §3).
 

@@ -412,7 +412,8 @@ def sync_weights(data_w, ages, decay: float):
     return w / jnp.maximum(jnp.sum(w), 1e-12)
 
 
-def merge_partials(partials_stacked: Any, data_w, ages, decay: float) -> Any:
+def merge_partials(partials_stacked: Any, data_w, ages, decay: float,
+                   fallback: Optional[Any] = None) -> Any:
     """Staleness-discounted merge of per-RSU partials into the global tree.
 
     partials_stacked: any pytree whose leaves carry a leading (K,) segment
@@ -420,12 +421,27 @@ def merge_partials(partials_stacked: Any, data_w, ages, decay: float) -> Any:
     Returns the ω̂-weighted sum over the segment axis. With K=1 the single
     normalized weight is exactly 1.0 (x/x), so the merge is bit-exact
     identity on the lone partial.
+
+    fallback: optional tree shaped like one segment slot, returned when
+    EVERY ω_k underflows to zero (all partials stale past float range —
+    ``decay**age == 0.0``). Without it the eps-guarded normalization
+    silently yields an all-zero tree, wiping the global adapter; with it
+    the degenerate merge keeps the previous global instead. Callers that
+    already gate the merge on Σω > 0 (the fused engine's ``do_merge``)
+    don't pass it — their program must stay byte-identical.
     """
-    wn = sync_weights(data_w, ages, decay)
-    return jax.tree_util.tree_map(
+    w = jnp.asarray(data_w, jnp.float32) * staleness_weights(ages, decay)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    merged = jax.tree_util.tree_map(
         lambda x: jnp.sum(x.astype(jnp.float32)
                           * _wvec(wn, x.ndim), axis=0),
         partials_stacked)
+    if fallback is None:
+        return merged
+    alive = jnp.sum(w) > 0
+    return jax.tree_util.tree_map(
+        lambda m, f: jnp.where(alive, m, f.astype(jnp.float32)),
+        merged, fallback)
 
 
 def segment_weight_matrix(assoc, weights, num_segments: int
@@ -518,6 +534,94 @@ def unstack_partials(stacked: Any, num_segments: int) -> List[Any]:
     """Inverse of :func:`stack_partials` (host-side mirroring)."""
     return [jax.tree_util.tree_map(lambda x: x[k], stacked)
             for k in range(num_segments)]
+
+
+# ---------------------------------------------------------------------------
+# Semi-synchronous participation: the in-flight upload buffer (DESIGN.md §8).
+# A vehicle whose upload misses its round parks the trained MERGED DELTA
+# (rank-padded, so one shape per target regardless of the lane's rank) in a
+# per-lane buffer; it lands k rounds late at weight w·decay**k. These
+# helpers are the SHARED algebra between the host-side buffer (RSUServer)
+# and the fused engine's scan-carry buffer — both paths call the same
+# functions so serial/fused parity is an identity, not a tolerance.
+# ---------------------------------------------------------------------------
+
+def merge_delta_fleet(stacked: Any, scale: float, *,
+                      constrain: Optional[Any] = None) -> Any:
+    """Per-lane merged deltas of a rank-padded fleet-stacked adapter tree.
+
+    Unlike :func:`aggregate_merged_padded` there is NO reduction over the
+    fleet axis: leaf (V, ..., d_in, d_out) = scale · A_v·B_v per lane.
+    Zeroed rank tails contribute exact zeros, so a lane's delta equals
+    ``core.lora.merge_delta`` of its truncated-rank adapter bitwise.
+    """
+    if constrain is not None:
+        stacked = constrain(stacked)
+    paths = tree_paths(_skeleton(stacked))
+    out = _skeleton(stacked)
+    for path in paths:
+        ad = tree_get(stacked, path)
+        delta = scale * jnp.einsum("v...ir,v...ro->v...io",
+                                   ad["a"].astype(jnp.float32),
+                                   ad["b"].astype(jnp.float32))
+        out = tree_set(out, path, {"delta": delta})
+    return out
+
+
+def buffer_release_sum(buf_stacked: Any, rel_w) -> Tuple[Any, jnp.ndarray]:
+    """Raw weighted sum of released buffer lanes (trivial-tier landing).
+
+    buf_stacked: buffered delta tree with a leading (V,) lane axis.
+    rel_w: (V,) staleness-discounted release weights, 0 for lanes not
+    releasing this round (exact no-ops). Returns ``(raw_sum_tree,
+    rel_tot)`` — the UNnormalized Σ relw_v·δ_v and its total weight, ready
+    for :func:`combine_with_released`.
+    """
+    w = jnp.asarray(rel_w, jnp.float32)
+    raw = jax.tree_util.tree_map(
+        lambda x: jnp.einsum("v,v...->...", w, x.astype(jnp.float32)),
+        buf_stacked)
+    return raw, jnp.sum(w)
+
+
+def segment_buffer_release(buf_stacked: Any, rel_w, dest,
+                           num_segments: int) -> Tuple[Any, jnp.ndarray]:
+    """Per-RSU raw sums of released buffer lanes (hierarchy landing).
+
+    dest: (V,) destination segment per lane (-1 ⇒ no-op row, same
+    convention as :func:`segment_weight_matrix`). Returns ``(raw_k_tree,
+    rel_w_k)`` with a leading (K,) axis: slot k is the unnormalized
+    Σ relw_v·δ_v over lanes addressed to RSU k, plus its weight sum.
+    """
+    dest = jnp.asarray(dest, jnp.int32)
+    w = jnp.asarray(rel_w, jnp.float32)
+    w_vk = w[:, None] * jax.nn.one_hot(dest, num_segments,
+                                       dtype=jnp.float32)   # (V, K)
+    raw = jax.tree_util.tree_map(
+        lambda x: jnp.einsum("vk,v...->k...", w_vk, x.astype(jnp.float32)),
+        buf_stacked)
+    return raw, jnp.sum(w_vk, axis=0)
+
+
+def combine_with_released(merged: Any, live_w, released_raw: Any,
+                          released_w) -> Any:
+    """Fold released (late) uploads into an already-normalized merge.
+
+    merged: the normalized live aggregate (Σ w_v·δ_v / Σ w_v or a
+    per-segment column of it); live_w: its raw weight total (scalar or
+    (K,)); released_raw / released_w: the matching raw release sums from
+    :func:`buffer_release_sum` / :func:`segment_buffer_release`. Returns
+    (merged·W_live + released_raw) / max(W_live + W_rel, eps) — exactly
+    the normalized aggregate over live ∪ released, without re-reducing
+    the fleet.
+    """
+    lw = jnp.asarray(live_w, jnp.float32)
+    rw = jnp.asarray(released_w, jnp.float32)
+    tot = jnp.maximum(lw + rw, 1e-12)
+    return jax.tree_util.tree_map(
+        lambda m, r: (m.astype(jnp.float32) * _wvec(lw, m.ndim)
+                      + r.astype(jnp.float32)) / _wvec(tot, m.ndim),
+        merged, released_raw)
 
 
 # ---------------------------------------------------------------------------

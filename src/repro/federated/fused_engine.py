@@ -201,6 +201,12 @@ class FusedRoundEngine:
         self.K = self.tier.num_rsus_per_task
         self.P = self.tier.sync_period
         self.tier_trivial = self.tier.trivial
+        # semi-synchronous participation: in-flight upload buffer carried
+        # through the round program. The sync policy keeps the pre-policy
+        # program byte-for-byte (static branch at trace time, like the
+        # trivial tier above).
+        self.part = cfg.participation
+        self.part_trivial = self.part.trivial
         self.Rmax = cfg.lora.max_rank
         self.steps = cfg.local_steps
         self.opt = adam(cfg.lr)
@@ -280,6 +286,12 @@ class FusedRoundEngine:
         # per-task RSU partials: merged-delta tree with a leading (K,) axis
         self._zero_partials = jax.tree_util.tree_map(
             lambda x: jnp.zeros((self.K,) + x.shape, x.dtype),
+            self._zero_merged)
+        # per-lane buffered merged deltas (semi-sync participation): the
+        # same merged-delta tree with a leading (Vp,) fleet axis, so the
+        # buffer shards over the fleet mesh like every per-vehicle array
+        self._zero_buf = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((self.Vp,) + x.shape, x.dtype),
             self._zero_merged)
         if self.mesh is not None:
             # the fleet template lives sharded on the mesh, so everything
@@ -383,6 +395,13 @@ class FusedRoundEngine:
                   "partial_w", "partial_age"):
             if k in out:
                 out[k] = put_repl(out[k])
+        if "buf_delta" in out:
+            # per-lane buffer state shards over the fleet axis (leading
+            # Vp dimension) exactly like the staged fleet arrays
+            from repro.launch import sharding as sh_rules
+            for k in ("buf_delta", "buf_w", "buf_age", "buf_dest"):
+                out[k] = jax.device_put(out[k], sh_rules.fleet_shardings(
+                    self.mesh, out[k], axis_name=an, fleet_size=self.Vp))
         return out
 
     def _pad_ucb(self, state) -> ucb_dual.UCBDualState:
@@ -437,6 +456,40 @@ class FusedRoundEngine:
             self._carry["partials"] = parts
             self._carry["partial_w"] = jnp.asarray(np.stack(pw))
             self._carry["partial_age"] = jnp.asarray(np.stack(page))
+        if not self.part_trivial:
+            # adopt the host servers' in-flight buffers (engine switch or
+            # checkpoint restore): vehicle ids scatter through self.slot
+            bufs, bw, bage, bdest = [], [], [], []
+            for t in range(self.T):
+                srv = sim.servers[t]
+                w = np.zeros((self.Vp,), np.float32)
+                age = np.zeros((self.Vp,), np.float32)
+                dest = np.full((self.Vp,), -1, np.int32)
+                if srv.buffer:
+                    host = jax.tree_util.tree_map(
+                        lambda z: np.zeros((self.Vp,) + z.shape, np.float32),
+                        self._zero_merged)
+                    for v, ent in srv.buffer.items():
+                        lane = int(self.slot[v])
+
+                        def put(h, d, lane=lane):
+                            h[lane] = np.asarray(d, np.float32)
+                            return h
+                        host = jax.tree_util.tree_map(put, host,
+                                                      ent["delta"])
+                        w[lane] = ent["w"]
+                        age[lane] = ent["age"]
+                        dest[lane] = ent["dest"]
+                    bufs.append(jax.tree_util.tree_map(jnp.asarray, host))
+                else:
+                    bufs.append(self._zero_buf)
+                bw.append(jnp.asarray(w))
+                bage.append(jnp.asarray(age))
+                bdest.append(jnp.asarray(dest))
+            self._carry["buf_delta"] = bufs
+            self._carry["buf_w"] = bw
+            self._carry["buf_age"] = bage
+            self._carry["buf_dest"] = bdest
         self._carry = self._place_carry(self._carry)
 
     # ------------------------------------------------------------------
@@ -589,10 +642,14 @@ class FusedRoundEngine:
         new_ucb, new_merged = [], []
         has_m_out = []
         new_partials, new_pw, new_page = [], [], []
+        new_bdelta, new_bw, new_bage, new_bdest = [], [], [], []
         rec: Dict[str, List[Any]] = {k: [] for k in (
             "accuracy", "latency", "energy", "reward", "lambda", "mean_rank",
             "active", "departing", "handoffs", "fallbacks", "comm_params",
             "n_kept", "has_m")}
+        if not self.part_trivial:
+            for k in ("deferred", "released", "rel_weight"):
+                rec[k] = []
         check: Dict[str, List[Any]] = {"dist": [], "new": [], "ranks": []}
 
         for ti in range(self.T):
@@ -703,13 +760,60 @@ class FusedRoundEngine:
             #    Non-trivial tier: segment-sum per-RSU partials, then a
             #    staleness-weighted merge into the global adapter every
             #    sync_period rounds — all inside this same jit program.
-            w = jnp.where(contribute, self.weights[ti], 0.0)
-            keep = n_kept > 0
+            if not self.part_trivial:
+                # --- semi-sync participation: age → release → drop →
+                # admit, all dense masked lane algebra (host mirror:
+                # server.release_buffered / admit_buffered)
+                bw = carry["buf_w"][ti]
+                bage = carry["buf_age"][ti]
+                bdest = carry["buf_dest"][ti]
+                bdelta = carry["buf_delta"][ti]
+                occ = bw > 0.0
+                age1 = jnp.where(occ, bage + 1.0, 0.0)
+                within = occ & (age1 <= float(self.part.max_delay))
+                release = act & within          # vehicle back in coverage
+                keep_buf = within & ~act        # still in flight
+                relw = jnp.where(
+                    release, bw * agg.staleness_weights(
+                        age1, self.part.vehicle_staleness_decay), 0.0)
+                any_rel = jnp.sum(relw) > 0.0
+                # buffered partials follow the vehicle to its CURRENT RSU
+                # (buffer_handoffs) or land at the recorded destination —
+                # a static python bool, not a traced branch
+                if self.part.buffer_handoffs:
+                    dest_eff = x["assoc"][ti]
+                else:
+                    dest_eff = bdest
+                mig = (migrate if self.spec.mobility_aware
+                       else jnp.zeros((self.Vp,), bool))
+                if self.part.max_delay > 0:
+                    # the upload of a departing (non-migrating) contributor
+                    # does not complete this round: defer it to the buffer
+                    defer = contribute & dep & ~mig
+                else:
+                    # max_delay=0 degenerates to sync bit-exactly: the
+                    # defer/release sets are statically empty
+                    defer = jnp.zeros((self.Vp,), bool)
+                w = jnp.where(contribute & ~defer, self.weights[ti], 0.0)
+                keep = (jnp.sum(w) > 0.0) | any_rel
+            else:
+                w = jnp.where(contribute, self.weights[ti], 0.0)
+                keep = n_kept > 0
             # self._constrain is the identity on the trivial topology, so
             # passing it unconditionally keeps one code path
             if self.tier_trivial:
                 merged_new = agg.aggregate_merged_padded(
                     new_ads, w, self.S0, constrain=self._constrain)
+                if not self.part_trivial:
+                    # fold released buffer entries into the live merge in
+                    # raw-weight space; rounds without releases keep the
+                    # plain merge bit-for-bit (the where selects it)
+                    rel_raw, rel_tot = agg.buffer_release_sum(bdelta, relw)
+                    combined = agg.combine_with_released(
+                        merged_new, jnp.sum(w), rel_raw, rel_tot)
+                    merged_new = jax.tree_util.tree_map(
+                        lambda c, n: jnp.where(any_rel, c, n),
+                        combined, merged_new)
                 merged_out = self._replicate(jax.tree_util.tree_map(
                     lambda n, o: jnp.where(keep, n, o), merged_new,
                     carry["merged"][ti]))
@@ -720,6 +824,25 @@ class FusedRoundEngine:
                 part_new, seg_w = agg.aggregate_merged_padded_segmented(
                     new_ads, w, jnp.where(contribute, x["assoc"][ti], -1),
                     self.K, self.S0, constrain=self._constrain)
+                if not self.part_trivial:
+                    # released buffer entries land at their destination
+                    # RSU's partial (host mirror: _tier_fold_released);
+                    # release-free segments keep the plain segment merge
+                    rel_raw_k, rel_w_k = agg.segment_buffer_release(
+                        bdelta, relw, jnp.where(release, dest_eff, -1),
+                        self.K)
+                    comb_k = agg.combine_with_released(
+                        part_new, seg_w, rel_raw_k, rel_w_k)
+                    has_rel_k = rel_w_k > 0.0               # (K,)
+
+                    def fold(c, n):
+                        r = has_rel_k.reshape(
+                            (self.K,) + (1,) * (c.ndim - 1))
+                        return jnp.where(r, c, n)
+
+                    part_new = jax.tree_util.tree_map(fold, comb_k,
+                                                      part_new)
+                    seg_w = seg_w + rel_w_k
                 refreshed = seg_w > 0                       # (K,)
 
                 def upd(n, o):
@@ -748,6 +871,33 @@ class FusedRoundEngine:
                 new_partials.append(parts_out)
                 new_pw.append(jnp.where(is_sync, 0.0, pw))
                 new_page.append(jnp.where(is_sync, 0.0, page))
+
+            if not self.part_trivial:
+                # buffer state out: deferred lanes admit this round's
+                # merged delta at age 0; in-flight lanes age; released and
+                # overdue lanes zero their weight (the stale delta tree is
+                # an exact no-op at weight 0 in every release einsum)
+                new_delta = agg.merge_delta_fleet(
+                    new_ads, self.S0, constrain=self._constrain)
+                buf_delta_out = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        defer.reshape((self.Vp,) + (1,) * (n.ndim - 1)),
+                        n, o),
+                    new_delta, bdelta)
+                buf_w_out = jnp.where(defer, self.weights[ti],
+                                      jnp.where(keep_buf, bw, 0.0))
+                buf_age_out = jnp.where(defer, 0.0,
+                                        jnp.where(keep_buf, age1, 0.0))
+                buf_dest_out = jnp.where(
+                    defer, x["assoc"][ti],
+                    jnp.where(keep_buf, bdest, -1)).astype(jnp.int32)
+                new_bdelta.append(self._constrain(buf_delta_out))
+                new_bw.append(self._constrain(buf_w_out))
+                new_bage.append(self._constrain(buf_age_out))
+                new_bdest.append(self._constrain(buf_dest_out))
+                rec["deferred"].append(jnp.sum(defer).astype(jnp.int32))
+                rec["released"].append(jnp.sum(release).astype(jnp.int32))
+                rec["rel_weight"].append(jnp.sum(relw).astype(jnp.float32))
 
             # 7. global eval on the task's held-out set (seed-0 SVD at
             #    max_rank — the serial engine's eval_adapters view)
@@ -835,6 +985,11 @@ class FusedRoundEngine:
             out_carry["partials"] = new_partials
             out_carry["partial_w"] = jnp.stack(new_pw)
             out_carry["partial_age"] = jnp.stack(new_page)
+        if not self.part_trivial:
+            out_carry["buf_delta"] = new_bdelta
+            out_carry["buf_w"] = new_bw
+            out_carry["buf_age"] = new_bage
+            out_carry["buf_dest"] = new_bdest
         out_rec = {k: jnp.stack(v) for k, v in rec.items()}
         out_rec["budgets"] = budgets
         if self.check:
@@ -1021,6 +1176,11 @@ class FusedRoundEngine:
                 "comm_params": int(h["comm_params"][ti]),
                 "budget": float(h["budgets"][ti]),
             })
+            if "deferred" in h:
+                # buffer dynamics, mirroring the serial _finish_task record
+                tasks[-1]["deferred"] = int(h["deferred"][ti])
+                tasks[-1]["released"] = int(h["released"][ti])
+                tasks[-1]["rel_weight"] = float(h["rel_weight"][ti])
             # non-trivial tiers only gain a global model at a sync round,
             # so mirror the program's has_merged flag (for the trivial
             # tier it is equivalent to n_kept > 0)
@@ -1069,6 +1229,16 @@ class FusedRoundEngine:
                     agg.unstack_partials(c["partials"][t], self.K),
                     np.asarray(c["partial_w"][t]),
                     np.asarray(c["partial_age"][t]))
+            if not self.part_trivial:
+                # un-permute slot → vehicle order (lane_array[slot[v]] is
+                # vehicle v's lane; trivial topology: identity)
+                sl = self.slot
+                sim.servers[t].load_buffer(
+                    jax.tree_util.tree_map(
+                        lambda a: np.asarray(a)[sl], c["buf_delta"][t]),
+                    np.asarray(c["buf_w"][t])[sl],
+                    np.asarray(c["buf_age"][t])[sl],
+                    np.asarray(c["buf_dest"][t])[sl])
 
     # ------------------------------------------------------------------
     def _run_check(self, x, check) -> None:

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LoRAConfig, ModelConfig, RSUTierSpec
+from repro.config import (LoRAConfig, ModelConfig, ParticipationSpec,
+                          RSUTierSpec)
 from repro.core import aggregation as agg
 from repro.core import lora as lora_lib
 from repro.federated.batched_client import stack_trees as agg_stack
@@ -26,7 +27,8 @@ from repro.models import transformer as T
 class RSUServer:
     def __init__(self, cfg: ModelConfig, lora: LoRAConfig, method: str,
                  seed: int = 0, residual: bool = False,
-                 tier: Optional[RSUTierSpec] = None):
+                 tier: Optional[RSUTierSpec] = None,
+                 participation: Optional[ParticipationSpec] = None):
         """residual: beyond-paper aggregation — accumulate client
         *increments* (B̂Â − B⁰A⁰) onto the retained global Δθ instead of
         replacing it with the weighted product average. The paper's replace
@@ -39,13 +41,22 @@ class RSUServer:
         by the caller-supplied association) and the global state only
         refreshes every ``sync_period`` rounds, as the staleness-weighted
         merge of the partials. The trivial default keeps the pre-hierarchy
-        behavior bit-exactly (the partial machinery is never entered)."""
+        behavior bit-exactly (the partial machinery is never entered).
+
+        participation: round-participation policy
+        (:class:`repro.config.ParticipationSpec`). With ``semi_sync`` a
+        missed upload parks its merged delta in the in-flight buffer
+        (one entry per vehicle: delta tree, data weight, age, destination
+        RSU) and lands k rounds late at weight ``w·decay**k`` via
+        :meth:`release_buffered`. The trivial default keeps strict
+        synchrony bit-exactly (the buffer machinery is never entered)."""
         assert method in ("ours", "homolora", "hetlora", "fedra")
         self.cfg = cfg
         self.lora = lora
         self.method = method
         self.residual = residual
         self.tier = tier or RSUTierSpec()
+        self.participation = participation or ParticipationSpec()
         if not self.tier.trivial:
             if method not in ("ours", "hetlora"):
                 raise ValueError(
@@ -55,6 +66,17 @@ class RSUServer:
                 raise ValueError(
                     "residual aggregation is incompatible with multi-RSU "
                     "tiers (increments would double-count across partials)")
+        if not self.participation.trivial:
+            if method != "ours":
+                raise ValueError(
+                    "semi_sync participation buffers MERGED DELTAS, which "
+                    "only the 'ours' aggregation consumes; got "
+                    f"{method!r} with {self.participation}")
+            if residual:
+                raise ValueError(
+                    "residual aggregation is incompatible with semi_sync "
+                    "participation (a late increment would be applied "
+                    "against the wrong base)")
         self.key = jax.random.PRNGKey(seed)
         self.round = 0
         # method-specific global state
@@ -66,6 +88,11 @@ class RSUServer:
         self.partials: Optional[List[Any]] = None
         self.partial_w = np.zeros(K, np.float64)
         self.partial_age = np.zeros(K, np.int64)
+        # semi_sync in-flight upload buffer: vehicle id → {"delta" (merged
+        # delta tree), "w" (data weight), "age" (rounds waited), "dest"
+        # (RSU the upload is addressed to)} — the host mirror of the fused
+        # engine's scan-carry buffer lanes
+        self.buffer: Dict[int, Dict[str, Any]] = {}
         self.fedra_fraction = 0.6
         self._masks: List[np.ndarray] = []
         self._distributed: List[Any] = []
@@ -167,24 +194,32 @@ class RSUServer:
                   weights: Sequence[float],
                   masks: Optional[Sequence] = None,
                   indices: Optional[Sequence[int]] = None,
-                  assoc: Optional[Sequence[int]] = None) -> None:
+                  assoc: Optional[Sequence[int]] = None,
+                  released: Optional[Sequence] = None) -> None:
         """masks: FedRA layer masks for the *kept* clients (aligned with
         client_adapters — departures may drop some distributed clients).
         indices: positions of the kept clients within the distributed list
         (needed by residual aggregation).
         assoc: per-kept-client RSU index within this task's group (required
-        for non-trivial tiers; routes each upload into its RSU partial)."""
+        for non-trivial tiers; routes each upload into its RSU partial).
+        released: late uploads landing this round — (delta, weight, dest)
+        triples from :meth:`release_buffered`; they fold into the live
+        aggregate at their discounted weights (semi_sync only)."""
         if masks is not None:
             self._masks = list(masks)
         if not self.tier.trivial:
-            self._tier_aggregate_list(client_adapters, weights, assoc)
+            self._tier_aggregate_list(client_adapters, weights, assoc,
+                                      released)
             return
-        if not client_adapters:
+        if not client_adapters and not released:
             self.round += 1
             return
         if self.method == "ours":
-            new_merged = agg.aggregate_merged(client_adapters, weights,
-                                              self.lora.scale)
+            if client_adapters:
+                new_merged = agg.aggregate_merged(client_adapters, weights,
+                                                  self.lora.scale)
+            else:
+                new_merged = None   # released-only round
             if self.residual and self.merged is not None and indices:
                 base = [self._distributed[i] for i in indices]
                 old_part = agg.aggregate_merged(base, weights,
@@ -192,6 +227,15 @@ class RSUServer:
                 self.merged = jax.tree_util.tree_map(
                     lambda g, n, o: g + (n - o), self.merged,
                     new_merged, old_part)
+            elif released:
+                raw, rel_tot = self._released_raw(released)
+                if new_merged is None:
+                    self.merged = jax.tree_util.tree_map(
+                        lambda r: r / max(rel_tot, 1e-12), raw)
+                else:
+                    live_w = float(np.sum(np.asarray(weights, np.float64)))
+                    self.merged = agg.combine_with_released(
+                        new_merged, live_w, raw, rel_tot)
             else:
                 self.merged = new_merged
         elif self.method == "homolora":
@@ -213,7 +257,8 @@ class RSUServer:
         self.round += 1
 
     # ------------------------------------------------------------------
-    def aggregate_grouped(self, groups: Sequence[Dict[str, Any]]) -> None:
+    def aggregate_grouped(self, groups: Sequence[Dict[str, Any]],
+                          released: Optional[Sequence] = None) -> None:
         """Batched-engine aggregation over stacked per-rank client groups.
 
         groups: list of dicts
@@ -224,20 +269,23 @@ class RSUServer:
                       distributed list (residual aggregation)
             assoc:    (n_g,) per-lane RSU index (non-trivial tiers; padded
                       lanes may carry any index — their weight is 0)
+        released: late uploads landing this round (see :meth:`aggregate`).
         Equivalent to :meth:`aggregate` over the concatenated clients, but
         each rank group is reduced with one vectorized contraction.
         """
         if not self.tier.trivial:
-            self._tier_aggregate_grouped(groups)
+            self._tier_aggregate_grouped(groups, released)
             return
-        if not groups:
+        if not groups and not released:
             self.round += 1
             return
         pairs = [(g["adapters"], g["weights"]) for g in groups]
         if self.method == "ours":
-            new_merged = agg.aggregate_merged_grouped(pairs, self.lora.scale)
+            new_merged = (agg.aggregate_merged_grouped(pairs,
+                                                       self.lora.scale)
+                          if pairs else None)
             has_idx = all(g.get("indices") is not None for g in groups)
-            if self.residual and self.merged is not None and has_idx:
+            if self.residual and self.merged is not None and has_idx and pairs:
                 base_pairs = [
                     (agg_stack([self._distributed[i] for i in g["indices"]]),
                      g["weights"]) for g in groups]
@@ -246,6 +294,17 @@ class RSUServer:
                 self.merged = jax.tree_util.tree_map(
                     lambda g_, n, o: g_ + (n - o), self.merged,
                     new_merged, old_part)
+            elif released:
+                raw, rel_tot = self._released_raw(released)
+                if new_merged is None:
+                    self.merged = jax.tree_util.tree_map(
+                        lambda r: r / max(rel_tot, 1e-12), raw)
+                else:
+                    live_w = float(sum(
+                        np.sum(np.asarray(w, np.float64))
+                        for _, w in pairs))
+                    self.merged = agg.combine_with_released(
+                        new_merged, live_w, raw, rel_tot)
             else:
                 self.merged = new_merged
         elif self.method == "homolora":
@@ -274,7 +333,8 @@ class RSUServer:
     # Two-tier hierarchy: per-RSU partials + periodic staleness-weighted
     # sync (non-trivial RSUTierSpec only; the trivial tier never gets here)
     # ------------------------------------------------------------------
-    def _tier_aggregate_list(self, client_adapters, weights, assoc) -> None:
+    def _tier_aggregate_list(self, client_adapters, weights, assoc,
+                             released=None) -> None:
         """Serial-engine path: route per-client trees into RSU partials."""
         K = self.tier.num_rsus_per_task
         if client_adapters and assoc is None:
@@ -294,9 +354,32 @@ class RSUServer:
                 refreshed[k] = (agg.aggregate_hetlora(subset, w,
                                                       self.lora.max_rank),
                                 sum(w))
+        self._tier_fold_released(refreshed, released)
         self._tier_commit(refreshed)
 
-    def _tier_aggregate_grouped(self, groups) -> None:
+    def _tier_fold_released(self, refreshed, released) -> None:
+        """Fold late uploads into their destination RSUs' refreshes: a
+        segment with live uploads combines at raw weights; one without
+        becomes refreshed purely by the release (same partial-update
+        semantics either way — the RSU received data this round)."""
+        if not released:
+            return
+        by_dest: Dict[int, List] = {}
+        for delta, w, dest in released:
+            if int(dest) >= 0:
+                by_dest.setdefault(int(dest), []).append((delta, w, dest))
+        for k, entries in by_dest.items():
+            raw, tot = self._released_raw(entries)
+            if k in refreshed:
+                norm, live_w = refreshed[k]
+                refreshed[k] = (agg.combine_with_released(norm, live_w,
+                                                          raw, tot),
+                                live_w + tot)
+            else:
+                refreshed[k] = (jax.tree_util.tree_map(
+                    lambda r: r / max(tot, 1e-12), raw), tot)
+
+    def _tier_aggregate_grouped(self, groups, released=None) -> None:
         """Batched-engine path: segment-sum every stacked rank group, then
         combine the per-group partials by their raw segment weights."""
         K = self.tier.num_rsus_per_task
@@ -331,6 +414,7 @@ class RSUServer:
                 if tot_host[k] > 0.0:
                     refreshed[k] = (jax.tree_util.tree_map(
                         lambda x: x[k], norm), float(tot_host[k]))
+        self._tier_fold_released(refreshed, released)
         self._tier_commit(refreshed)
 
     def _tier_commit(self, refreshed) -> None:
@@ -348,7 +432,18 @@ class RSUServer:
                 self.partial_age[k] += 1
         if (self.round + 1) % self.tier.sync_period == 0:
             live = [k for k in range(K) if self.partial_w[k] > 0]
-            if live:
+            # degenerate-staleness guard: when EVERY live partial's
+            # discount decay**age has underflowed to 0.0 the eps-guarded
+            # normalization would return an all-zero tree and silently
+            # wipe the global adapter — keep the previous global instead
+            # (the fused engine guards the same case with its do_merge
+            # predicate; tests/test_participation.py pins both)
+            omega = (np.asarray(self.partial_w[live], np.float64)
+                     * np.asarray(agg.staleness_weights(
+                         self.partial_age[live],
+                         self.tier.staleness_decay), np.float64)
+                     if live else np.zeros(0))
+            if live and float(np.sum(omega)) > 0.0:
                 merged = agg.merge_partials(
                     agg.stack_partials([self.partials[k] for k in live]),
                     self.partial_w[live], self.partial_age[live],
@@ -368,6 +463,81 @@ class RSUServer:
         self.partials = list(partials)
         self.partial_w = np.asarray(weights, np.float64).copy()
         self.partial_age = np.asarray(ages, np.int64).copy()
+
+    # ------------------------------------------------------------------
+    # Semi-synchronous participation: the host-side in-flight upload
+    # buffer (non-trivial ParticipationSpec only; sync never gets here).
+    # Round ordering — age, release, drop, admit — matches the fused
+    # engine's scan-carry buffer step (DESIGN.md §8) exactly.
+    # ------------------------------------------------------------------
+    def release_buffered(self, active, assoc=None) -> List:
+        """Advance every buffered upload one round and collect the ones
+        landing NOW: vehicle back in coverage and still within
+        ``max_delay``. A release lands at the staleness-discounted weight
+        ``w·decay**age``; overdue entries are dropped. Returns
+        (delta, weight, dest) triples for :meth:`aggregate`'s ``released``
+        argument — with ``buffer_handoffs`` dest is the vehicle's CURRENT
+        RSU (the partial followed it), else the RSU it trained under."""
+        part = self.participation
+        if part.trivial or not self.buffer:
+            return []
+        released = []
+        for lane in sorted(self.buffer):   # deterministic lane order
+            ent = self.buffer[lane]
+            age1 = ent["age"] + 1
+            within = age1 <= part.max_delay
+            if bool(active[lane]) and within:
+                relw = ent["w"] * float(agg.staleness_weights(
+                    age1, part.vehicle_staleness_decay))
+                dest = ent["dest"]
+                if part.buffer_handoffs and assoc is not None:
+                    dest = int(assoc[lane])
+                released.append((ent["delta"], relw, dest))
+                del self.buffer[lane]
+            elif within:
+                ent["age"] = age1
+            else:                           # overdue: drop
+                del self.buffer[lane]
+        return released
+
+    def admit_buffered(self, entries) -> None:
+        """Park this round's missed uploads: (vehicle, delta, weight,
+        dest) tuples enter the buffer at age 0. A vehicle re-entering
+        overwrites its previous entry (it retrained — the old partial is
+        superseded)."""
+        if self.participation.trivial:
+            return
+        for lane, delta, w, dest in entries:
+            self.buffer[int(lane)] = {"delta": delta, "w": float(w),
+                                      "age": 0, "dest": int(dest)}
+
+    def load_buffer(self, deltas, weights, ages, dests) -> None:
+        """Adopt the in-flight buffer computed off-host (fused engine):
+        deltas is a tree with a leading (V,) vehicle axis, weights/ages/
+        dests are (V,); weight 0 marks an empty lane."""
+        w = np.asarray(weights, np.float64)
+        age = np.asarray(ages, np.int64)
+        dest = np.asarray(dests, np.int64)
+        self.buffer = {}
+        for v in range(len(w)):
+            if w[v] > 0.0:
+                self.buffer[v] = {
+                    "delta": jax.tree_util.tree_map(lambda x: x[v], deltas),
+                    "w": float(w[v]), "age": int(age[v]),
+                    "dest": int(dest[v])}
+
+    def _released_raw(self, released):
+        """Σ relw·δ over released entries + total weight (raw, for
+        :func:`repro.core.aggregation.combine_with_released`)."""
+        raw = None
+        tot = 0.0
+        for delta, w, _dest in released:
+            term = jax.tree_util.tree_map(
+                lambda x: jnp.float32(w) * x.astype(jnp.float32), delta)
+            raw = term if raw is None else jax.tree_util.tree_map(
+                jnp.add, raw, term)
+            tot += float(w)
+        return raw, tot
 
     def _seg_masks(self, mask: np.ndarray) -> jnp.ndarray:
         # our sim models are single-segment; general case splits by segment

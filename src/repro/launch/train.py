@@ -153,6 +153,24 @@ def main():
                              "dispatch: off = jnp paths, auto = compiled "
                              "kernels iff running on TPU, on = force "
                              "(interpret mode off-TPU — validation only)")
+    parser.add_argument("--simulate", default=None, metavar="SCENARIO",
+                        help="run an IoV federated fine-tuning scenario "
+                             "(repro.sim.scenarios preset name) instead of "
+                             "the LM step loop")
+    parser.add_argument("--participation", choices=("sync", "semi-sync"),
+                        default="sync",
+                        help="--simulate round participation policy: sync "
+                             "drops uploads from vehicles that leave "
+                             "coverage mid-round; semi-sync buffers them "
+                             "in flight and lands them up to max_delay "
+                             "rounds late at staleness-discounted weight")
+    parser.add_argument("--engine", default=None,
+                        help="--simulate engine override "
+                             "(serial|batched|fused|fused_sharded)")
+    parser.add_argument("--rounds", type=int, default=None,
+                        help="--simulate horizon (default: scenario's)")
+    parser.add_argument("--seed", type=int, default=0,
+                        help="--simulate scenario seed")
     parser.add_argument("--checkpoint-every", type=int, default=0,
                         help="checkpoint adapters/optimizer every N steps "
                              "(0 = off; needs --checkpoint-dir)")
@@ -164,6 +182,22 @@ def main():
     args = parser.parse_args()
     if (args.checkpoint_every > 0 or args.resume) and not args.checkpoint_dir:
         parser.error("--checkpoint-every/--resume need --checkpoint-dir")
+
+    if args.simulate:
+        from repro.sim import scenarios
+        kw: Dict[str, Any] = {"participation": args.participation}
+        if args.engine:
+            kw["engine"] = args.engine
+        sim = scenarios.build_sim(args.simulate, rounds=args.rounds,
+                                  seed=args.seed, **kw)
+        R = sim.cfg.rounds
+        hist = (sim.run_scanned(R) if sim.fused is not None else sim.run())
+        for rec in hist:
+            print(f"round {rec['round']:3d} acc={rec['accuracy']:.4f} "
+                  f"energy={rec['energy']:.1f} reward={rec['reward']:.3f}")
+        print(f"done: {args.simulate} ({args.participation}), "
+              f"{R} rounds, final acc={hist[-1]['accuracy']:.4f}")
+        return
 
     if args.pallas != "off":
         from repro.models import runmode

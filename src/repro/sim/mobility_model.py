@@ -268,12 +268,23 @@ class MobilityModel:
         simulator steps once at the start of each round)."""
         return max(self.tick - 1, 0)
 
-    def effective_radius(self, rsu: RSU) -> float:
-        """The RSU's radius at the current round, honoring outage windows."""
+    def effective_radius(self, rsu: RSU,
+                         at_round: Optional[int] = None) -> float:
+        """The RSU's radius at ``at_round`` (default: the current round),
+        honoring outage windows. Departure prediction passes the round its
+        extrapolation horizon lands in, so the predicted-exit signal and
+        the in-flight upload buffer see the same coverage truth across an
+        outage edge."""
+        rnd = self.round_idx if at_round is None else at_round
         for o in self.cfg.outages:
-            if o.rsu_id == rsu.rsu_id and o.start <= self.round_idx < o.end:
+            if o.rsu_id == rsu.rsu_id and o.start <= rnd < o.end:
                 return 0.0
         return rsu.radius
+
+    def _horizon_round(self, horizon_s: float) -> int:
+        """The round a `horizon_s`-ahead extrapolation lands in (at least
+        one round ahead — a prediction is always about the future)."""
+        return self.round_idx + max(1, int(np.ceil(horizon_s / self.cfg.dt)))
 
     def distances_to(self, rsu: RSU) -> np.ndarray:
         return np.linalg.norm(self.pos - np.asarray(rsu.xy), axis=1)
@@ -283,10 +294,16 @@ class MobilityModel:
 
     def predict_departure(self, rsu: RSU, horizon_s: float) -> np.ndarray:
         """True for vehicles predicted to exit coverage within `horizon_s`
-        (linear velocity extrapolation — §IV-E's anticipation signal)."""
+        (linear velocity extrapolation — §IV-E's anticipation signal).
+        The future position is tested against the radius AT the horizon
+        round, not the current one: predicting through an outage edge with
+        the current radius would call vehicles 'staying' inside a window
+        that is about to collapse to radius 0 (and vice versa)."""
         future = self.pos + self.vel * horizon_s
         d_future = np.linalg.norm(future - np.asarray(rsu.xy), axis=1)
-        return (d_future > self.effective_radius(rsu)) & self.in_coverage(rsu)
+        r_future = self.effective_radius(
+            rsu, at_round=self._horizon_round(horizon_s))
+        return (d_future > r_future) & self.in_coverage(rsu)
 
     def round_view(self, rsu: RSU, horizon_s: Optional[float] = None) -> dict:
         """Everything one task round needs from mobility, in one snapshot:
@@ -354,11 +371,17 @@ class MobilityModel:
         # distances to the associated RSU (column 0 for unassociated lanes
         # — identical to the single-RSU view when the group has one RSU)
         dist = d[np.arange(len(assoc)), np.maximum(assoc, 0)]
-        # departure: the extrapolated position escapes the whole group
+        # departure: the extrapolated position escapes the whole group —
+        # judged against the radii AT the horizon round (an RSU entering
+        # an outage next round has radius 0 there; see predict_departure)
         future = self.pos + self.vel * h
         d_future = np.linalg.norm(future[:, None, :] - centers[None],
                                   axis=-1)
-        future_covered = (d_future <= radii[None, :]).any(axis=1)
+        rnd_future = self._horizon_round(h)
+        radii_future = np.array(
+            [self.effective_radius(r, at_round=rnd_future) for r in rsus],
+            np.float64)
+        future_covered = (d_future <= radii_future[None, :]).any(axis=1)
         departing = active & ~future_covered
         staying = active & ~departing
         # handoff memory: advance once per tick, idempotent within a tick

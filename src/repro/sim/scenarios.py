@@ -33,7 +33,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.config import (EnergyAllocConfig, LoRAConfig, OutageSpec,
-                          RSUTierSpec, TraceSpec)
+                          ParticipationSpec, RSUTierSpec, TraceSpec)
 from repro.sim.mobility_model import MobilitySimConfig
 from repro.sim.simulator import SimConfig
 
@@ -108,6 +108,10 @@ def _cfg(scenario: str, method: str, rounds: int, seed: int,
     # simulator re-stamps both onto its own mobility_sim copy, and the
     # trace is materialized for whatever fleet size that copy carries
     base.update(overrides)
+    if "participation" in base:
+        # string sugar: participation="semi-sync" builds the default
+        # ParticipationSpec for that mode (full specs pass through)
+        base["participation"] = ParticipationSpec.of(base["participation"])
     return SimConfig(**base)
 
 

@@ -31,8 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (CheckpointSpec, EnergyAllocConfig, LoRAConfig,
-                          MobilityConfig, ModelConfig, RSUTierSpec, ShardSpec,
-                          UCBDualConfig, get_arch)
+                          MobilityConfig, ModelConfig, ParticipationSpec,
+                          RSUTierSpec, ShardSpec, UCBDualConfig, get_arch)
+from repro.core import aggregation as agg
 from repro.core import cost_model as cm
 from repro.core import energy_alloc, mobility as mob
 from repro.core import ucb_dual
@@ -71,6 +72,13 @@ class SimConfig:
     # staleness-weighted global sync. The trivial default (1 RSU per task,
     # sync every round) is regression-pinned to the pre-hierarchy engines.
     rsu_tier: RSUTierSpec = field(default_factory=RSUTierSpec)
+    # round-participation policy (repro.config.ParticipationSpec): WHEN an
+    # upload lands. The trivial default ("sync") keeps strict round
+    # synchrony bit-exactly on every engine; "semi_sync" parks missed
+    # uploads in an in-flight buffer and lands them k rounds late at
+    # decay**k weight (buffered handoffs follow the vehicle across RSUs).
+    participation: ParticipationSpec = field(
+        default_factory=ParticipationSpec)
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     departure_fraction: float = 0.5   # fraction of local steps done at exit
     bytes_per_param: int = 4
@@ -201,7 +209,8 @@ class IoVSimulator:
                                   server_method(cfg.method),
                                   seed=cfg.seed + 7 * t,
                                   residual=is_residual(cfg.method),
-                                  tier=cfg.rsu_tier)
+                                  tier=cfg.rsu_tier,
+                                  participation=cfg.participation)
                         for t in range(cfg.num_tasks)]
         K = len(cfg.lora.candidate_ranks)
         self.ucb_states = [ucb_dual.init_state(cfg.num_vehicles, K)
@@ -493,6 +502,14 @@ class IoVSimulator:
         kept_masks: List[Any] = []
         kept_adapters: List[Any] = []    # serial engine only
         kept_assoc: List[int] = []       # associated RSU per kept client
+        # semi_sync: active-list positions whose upload DEFERS into the
+        # in-flight buffer (departing non-migrating contributors — the
+        # vehicle exits coverage before its upload completes). With
+        # max_delay=0 the buffer cannot hold a round, so every upload
+        # lands in its own round: sync semantics, bit-exactly.
+        part = cfg.participation
+        deferrable = not part.trivial and part.max_delay > 0
+        deferred_idx: List[int] = []
         per_v_reward = np.zeros(cfg.num_vehicles, np.float32)
         per_v_energy = np.zeros(cfg.num_vehicles, np.float32)
         costs_list: List[cm.RoundCosts] = []
@@ -527,6 +544,7 @@ class IoVSimulator:
                 g=g)
 
             contribute = True
+            migrated = False
             extra_energy = 0.0
             extra_latency = 0.0
             if not tier.trivial and bool(handoff[v]):
@@ -545,6 +563,7 @@ class IoVSimulator:
                 if dec.strategy == mob.ABANDON:
                     contribute = False
                 elif dec.strategy == mob.MIGRATE:
+                    migrated = True
                     extra_energy += cfg.mobility.migration_energy
                     extra_latency += cfg.mobility.migration_latency
             elif dep:   # baseline: departure loses the update
@@ -557,6 +576,14 @@ class IoVSimulator:
                 cfg.ucb, jnp.asarray(local_acc), jnp.asarray(tau)))
             costs_list.append(costs)
             if contribute:
+                comm_params += payload
+                # semi_sync: a departing contributor that did not migrate
+                # exits coverage before its upload lands — the upload
+                # defers into the buffer (a migrating vehicle paid the
+                # §IV-E penalty precisely so its update lands NOW)
+                if deferrable and dep and not migrated:
+                    deferred_idx.append(i)
+                    continue
                 kept_idx.append(i)
                 kept_weights.append(float(len(self.client_data[ti][v])))
                 kept_assoc.append(int(plan["assoc"][v]))
@@ -564,16 +591,43 @@ class IoVSimulator:
                     kept_masks.append(mask)
                 if tr["ads_list"] is not None:
                     kept_adapters.append(tr["ads_list"][i])
-                comm_params += payload
 
-        agg_costs = cm.rsu_agg_costs(self.rsu_profile, len(kept_idx))
+        # RSU-side aggregation cost covers every upload PRODUCED this
+        # round (deferred ones transit late but still get processed; the
+        # sync path has no deferrals, so this is exactly len(kept_idx))
+        agg_costs = cm.rsu_agg_costs(self.rsu_profile,
+                                     len(kept_idx) + len(deferred_idx))
         summary = cm.task_round_summary(costs_list, agg_costs)
+
+        # semi_sync participation: collect the buffered uploads landing
+        # this round (vehicle back in coverage, within max_delay) BEFORE
+        # aggregating, then park this round's missed uploads afterwards —
+        # the same age→release→drop→admit ordering the fused engine's
+        # scan-carry buffer step uses (DESIGN.md §8)
+        released: List[Any] = []
+        if not part.trivial:
+            active_mask = np.zeros(cfg.num_vehicles, bool)
+            active_mask[active_ids] = True
+            released = server.release_buffered(active_mask, plan["assoc"])
+
         self._aggregate_task(server, plan, tr, kept_idx, kept_weights,
-                             kept_masks, kept_adapters, kept_assoc)
+                             kept_masks, kept_adapters, kept_assoc,
+                             released=released)
+
+        if deferred_idx:
+            entries = []
+            for i in deferred_idx:
+                v = active_ids[i]
+                ad = self._trained_adapter(tr, i)
+                delta = agg.aggregate_merged([ad], [1.0], cfg.lora.scale)
+                entries.append((int(v), delta,
+                                float(len(self.client_data[ti][v])),
+                                int(plan["assoc"][v])))
+            server.admit_buffered(entries)
 
         # global accuracy on the held-out task eval set
         gad = server.eval_adapters()
-        if gad is not None and kept_idx:
+        if gad is not None and (kept_idx or released):
             m = self.trainer.evaluate(self.params, gad,
                                       self.eval_batches[ti])
             acc = m["accuracy"]
@@ -596,7 +650,7 @@ class IoVSimulator:
                     - cfg.ucb.alpha * tau_t / cfg.ucb.latency_ref)
         mean_rank = float(np.mean([int(r) for r in ranks[active_ids]])
                           ) if len(active_ids) else 0.0
-        return {"task": self.tasks[ti].name, "accuracy": acc,
+        trec = {"task": self.tasks[ti].name, "accuracy": acc,
                 "latency": tau_t, "energy": e_t, "reward": reward_t,
                 "lambda": lam, "mean_rank": mean_rank,
                 "active": int(len(active_ids)),
@@ -606,18 +660,42 @@ class IoVSimulator:
                 "fallbacks": dict(n_fallback),
                 "comm_params": int(comm_params),
                 "budget": float(budget)}
+        if not part.trivial:
+            # buffer dynamics (semi_sync only, so sync history stays
+            # byte-identical to the pinned pre-participation fixtures)
+            trec["deferred"] = len(deferred_idx)
+            trec["released"] = len(released)
+            trec["rel_weight"] = float(sum(r[1] for r in released))
+        return trec
+
+    # ------------------------------------------------------------------
+    def _trained_adapter(self, tr: Dict[str, Any], i: int) -> Any:
+        """Trained adapter tree of active-list position `i` — per-client
+        list for the serial engine, lane-extracted from the stacked rank
+        group for the batched one (missed-upload buffering)."""
+        if tr["ads_list"] is not None:
+            return tr["ads_list"][i]
+        for r in sorted(tr["groups"]):
+            stacked, idxs = tr["groups"][r]
+            for j, ii in enumerate(idxs):
+                if ii == i:
+                    return jax.tree_util.tree_map(lambda x: x[j], stacked)
+        raise KeyError(f"active position {i} not found in rank groups")
 
     # ------------------------------------------------------------------
     def _aggregate_task(self, server, plan, tr, kept_idx, kept_weights,
-                        kept_masks, kept_adapters, kept_assoc) -> None:
+                        kept_masks, kept_adapters, kept_assoc,
+                        released=None) -> None:
         """Upload + aggregation. The batched engine hands the server the
         kept clients as stacked per-rank groups (one lane-gather per group);
         the serial engine keeps the per-client list path. kept_assoc routes
-        each upload into its RSU partial under non-trivial tiers."""
+        each upload into its RSU partial under non-trivial tiers; released
+        carries the semi_sync buffer's late uploads landing this round."""
         if tr["groups"] is None or not kept_idx:
             server.aggregate(kept_adapters, kept_weights or [1.0],
                              masks=kept_masks if kept_masks else None,
-                             indices=kept_idx, assoc=kept_assoc)
+                             indices=kept_idx, assoc=kept_assoc,
+                             released=released)
             return
         keep = set(kept_idx)
         w_of = dict(zip(kept_idx, kept_weights))
@@ -652,7 +730,7 @@ class IoVSimulator:
                 # weight keeps them exact no-ops in the segment sums
                 "assoc": np.asarray([a_of[i] for i in gi]
                                     + [a_of[gi[0]]] * npad, np.int32)})
-        server.aggregate_grouped(gspecs)
+        server.aggregate_grouped(gspecs, released=released)
 
     # ------------------------------------------------------------------
     def run_scanned(self, rounds: Optional[int] = None

@@ -201,12 +201,12 @@ def _sim(engine, rounds=2, shard=None, **kw):
     return IoVSimulator(cfg)
 
 
-def _scenario_sim(name, engine, rounds=2, seed=1):
+def _scenario_sim(name, engine, rounds=2, seed=1, **kw):
     from repro.sim import scenarios
     return scenarios.build_sim(name, method="ours", rounds=rounds,
                                seed=seed, engine=engine,
                                train_arch=_tiny_cfg(), lora=LORA,
-                               local_steps=1)
+                               local_steps=1, **kw)
 
 
 @multi_device
@@ -264,6 +264,28 @@ def test_sharded_matches_fused_hierarchy_preset():
     for ta, tb in zip(a.servers, b.servers):
         assert np.allclose(ta.partial_w, tb.partial_w, rtol=1e-4)
         assert np.array_equal(ta.partial_age, tb.partial_age)
+
+
+@multi_device
+def test_sharded_matches_fused_semi_sync():
+    """Semi-synchronous participation shards: the in-flight buffer (per-
+    lane delta trees, weight/age/dest) rides the scan carry fleet-sharded
+    and fused_sharded replays the unsharded semi_sync trajectory on the
+    buffer-exercising preset."""
+    from repro.config import ParticipationSpec
+    part = ParticipationSpec(mode="semi_sync", max_delay=3)
+    R = 8
+    a = _scenario_sim("rsu-outage", "fused", rounds=R,
+                      participation=part)
+    b = _scenario_sim("rsu-outage", "fused_sharded", rounds=R,
+                      participation=part)
+    _assert_parity(a.run_scanned(R), b.run_scanned(R))
+    # buffers mirror back in original lane order on both topologies
+    for ta, tb in zip(a.servers, b.servers):
+        assert sorted(ta.buffer) == sorted(tb.buffer)
+        for v in ta.buffer:
+            assert ta.buffer[v]["age"] == tb.buffer[v]["age"]
+            assert ta.buffer[v]["dest"] == tb.buffer[v]["dest"]
 
 
 @multi_device
