@@ -1,0 +1,83 @@
+"""CI regression gate for the serve-decode benchmark.
+
+Compares a freshly measured BENCH_serve_decode*.json against the committed
+baseline and fails (exit 1) when:
+
+  - a batch-width cell present in the baseline is missing from the fresh
+    run,
+  - any cell's decode compile count exceeds 1 — the one-compile contract:
+    mixed-rank adapter hot-swaps must be pure data movement, a second
+    compile means a shape or static leaked into the swap path,
+  - a cell stopped hot-swapping or its adapter cache stopped hitting
+    (the paging/cache machinery silently bypassed), or
+  - throughput drops below --tolerance × baseline tok/s. Absolute tok/s
+    on shared CI runners is noisy, so the default tolerance is loose
+    (0.4×) — it catches structural collapses (e.g. a recompile or a
+    host sync per token), not scheduler jitter. The structural checks
+    above are the teeth.
+
+Usage:
+    python -m benchmarks.check_serve_regression \
+        --baseline /tmp/serve_baseline.json \
+        --current benchmarks/results/BENCH_serve_decode_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cells(payload):
+    return {int(r["batch"]): r for r in payload.get("results", [])}
+
+
+def check(baseline_path: str, current_path: str,
+          tolerance: float = 0.4) -> int:
+    with open(baseline_path) as f:
+        base = _cells(json.load(f))
+    with open(current_path) as f:
+        cur = _cells(json.load(f))
+
+    ok = True
+    for batch, b in sorted(base.items()):
+        c = cur.get(batch)
+        if c is None:
+            print(f"FAIL: batch={batch} cell missing from current run")
+            ok = False
+            continue
+
+        compiles = int(c["compile_count"])
+        if compiles > 1:
+            print(f"FAIL: batch={batch} decode compiled {compiles}× — "
+                  "adapter hot-swap broke the one-compile contract")
+            ok = False
+
+        if int(b.get("swaps", 0)) > 0 and int(c.get("swaps", 0)) <= 0:
+            print(f"FAIL: batch={batch} baseline hot-swapped "
+                  f"({b['swaps']}×) but the current run never swapped")
+            ok = False
+        if int(b.get("cache_hits", 0)) > 0 and int(c.get("cache_hits", 0)) <= 0:
+            print(f"FAIL: batch={batch} adapter cache stopped hitting "
+                  f"(baseline {b['cache_hits']} hits, current 0)")
+            ok = False
+
+        b_tps, c_tps = float(b["tok_per_s"]), float(c["tok_per_s"])
+        floor = b_tps * tolerance
+        status = "ok" if c_tps >= floor else "REGRESSED"
+        print(f"batch={batch}: baseline {b_tps:.1f} tok/s  current "
+              f"{c_tps:.1f} tok/s  floor {floor:.1f}  "
+              f"compiles={compiles}  [{status}]")
+        if c_tps < floor:
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--current", required=True)
+    p.add_argument("--tolerance", type=float, default=0.4,
+                   help="current tok/s must be >= tolerance × baseline")
+    a = p.parse_args()
+    sys.exit(check(a.baseline, a.current, a.tolerance))

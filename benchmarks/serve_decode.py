@@ -1,0 +1,136 @@
+"""Serve-tier benchmark: multi-tenant decode throughput + hot-swap cost.
+
+Trains a small fleet (the adapters being served are REAL trained state,
+not random draws), bridges it into the ServeEngine via the AdapterStore,
+and serves a token stream with periodic mid-stream tenant hot-swaps —
+every lane cycling through (task, rsu, version, rank) combinations while
+the compiled decode program stays fixed.
+
+Reported per batch-width cell:
+  - tok/s (aggregate across lanes) and p50/p95 per-step latency,
+  - decode compile count (the one-compile contract: MUST be 1),
+  - hot-swap count and mean swap latency,
+  - adapter-cache hits/misses.
+
+Emits BENCH_serve_decode.json (or BENCH_serve_decode_smoke.json with
+--smoke); benchmarks/check_serve_regression.py gates CI on it.
+
+    python -m benchmarks.serve_decode --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.harness import save_bench_json
+from repro.config import LoRAConfig, ServeSpec
+from repro.launch.adapter_cache import AdapterStore
+from repro.launch.serve import ServeEngine
+from repro.sim.simulator import IoVSimulator, SimConfig
+
+
+def _train(smoke: bool) -> IoVSimulator:
+    cfg = SimConfig(
+        method="ours", num_tasks=2, num_vehicles=6,
+        rounds=2 if smoke else 6, local_steps=1 if smoke else 2,
+        lora=LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8)),
+        seed=0)
+    sim = IoVSimulator(cfg)
+    sim.run()
+    return sim
+
+
+def _serve_cell(sim, batch: int, tokens: int, swap_every: int
+                ) -> Dict[str, Any]:
+    spec = ServeSpec(max_batch=batch, cache_len=tokens + 8)
+    store = AdapterStore.from_sim(sim, spec=spec)
+    engine = ServeEngine(sim.params, sim.model_cfg, sim.cfg.lora, spec)
+    ranks = sim.cfg.lora.candidate_ranks
+
+    def tenant(i: int):
+        return store.get(i % store.num_tasks, rank=ranks[i % len(ranks)])
+
+    swap_s: List[float] = []
+    next_tenant = 0
+    for lane in range(batch):
+        t0 = time.perf_counter()
+        engine.assign(lane, tenant(next_tenant))
+        swap_s.append(time.perf_counter() - t0)
+        next_tenant += 1
+
+    # warmup: compile the decode program outside the timed stream
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, sim.model_cfg.vocab_size, batch)
+    jax.block_until_ready(engine.step(toks))
+    for lane in range(batch):
+        engine.reset_lane(lane)
+
+    step_s: List[float] = []
+    for i in range(tokens):
+        if swap_every and i and i % swap_every == 0:
+            lane = (i // swap_every - 1) % batch
+            t0 = time.perf_counter()
+            engine.assign(lane, tenant(next_tenant), reset=True)
+            swap_s.append(time.perf_counter() - t0)
+            next_tenant += 1
+        t0 = time.perf_counter()
+        logits = engine.step(toks)
+        jax.block_until_ready(logits)
+        step_s.append(time.perf_counter() - t0)
+        toks = np.asarray(np.argmax(logits, axis=-1))
+
+    lat = np.asarray(step_s)
+    return {
+        "batch": batch,
+        "tokens": tokens,
+        "tok_per_s": round(batch * tokens / float(lat.sum()), 2),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
+        "compile_count": engine.compile_count,
+        "swaps": engine.swaps,
+        "swap_mean_ms": round(float(np.mean(swap_s)) * 1e3, 3),
+        "cache_hits": store.cache.hits,
+        "cache_misses": store.cache.misses,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (and the committed baseline)")
+    ap.add_argument("--tokens", type=int, default=0,
+                    help="decode steps per cell (0 = scale default)")
+    args = ap.parse_args()
+
+    tokens = args.tokens or (32 if args.smoke else 96)
+    batches = [2, 4] if args.smoke else [2, 4, 8]
+
+    t0 = time.time()
+    sim = _train(args.smoke)
+    train_s = round(time.time() - t0, 1)
+
+    results = []
+    for batch in batches:
+        cell = _serve_cell(sim, batch, tokens, swap_every=8)
+        print(f"batch={cell['batch']}: {cell['tok_per_s']} tok/s  "
+              f"p50={cell['p50_ms']}ms p95={cell['p95_ms']}ms  "
+              f"compiles={cell['compile_count']} swaps={cell['swaps']}  "
+              f"cache {cell['cache_hits']}h/{cell['cache_misses']}m")
+        results.append(cell)
+
+    name = "serve_decode_smoke" if args.smoke else "serve_decode"
+    path = save_bench_json(name, {
+        "mode": "smoke" if args.smoke else "full",
+        "train_s": train_s,
+        "trained_rounds": sim.cfg.rounds,
+        "results": results,
+    })
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

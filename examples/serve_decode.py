@@ -1,54 +1,91 @@
-"""Serving example: batched single-token decode with KV caches on CPU
-(reduced config) — the `serve_step` that decode_32k / long_500k lower.
+"""Serving example: train → checkpoint → serve (DESIGN.md §5).
 
-    PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b
+Trains a tiny federated fleet for a few rounds (checkpointing each round),
+then serves the TRAINED per-task adapters from the checkpoint through the
+multi-tenant ServeEngine: every lane is a tenant holding a (task, RSU,
+version) adapter at its own rank, all rank-padded into one compiled decode
+program — hot-swapping tenants mid-stream never recompiles.
+
+    PYTHONPATH=src python examples/serve_decode.py --tokens 24
 """
 import argparse
-import functools
-import importlib
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LoRAConfig
+from repro.config import CheckpointSpec, LoRAConfig, ServeSpec
+from repro.launch.adapter_cache import AdapterStore
+from repro.launch.serve import ServeEngine
 from repro.models import transformer as T
+from repro.sim.simulator import IoVSimulator, SimConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="zamba2-2.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=48)
-    ap.add_argument("--window", type=int, default=16,
-                    help="sliding window (ring-buffer cache length)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--lanes", type=int, default=4)
     args = ap.parse_args()
 
-    mod = importlib.import_module(
-        "repro.configs." + args.arch.replace("-", "_").replace(".", "_"))
-    cfg = mod.reduced()
-    lora = LoRAConfig(rank=4)
-    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
-    caches = T.init_caches(cfg, args.batch, args.window, dtype=jnp.float32)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # -- train a small fleet, checkpointing every round -------------
+        cfg = SimConfig(
+            method="ours", num_tasks=2, num_vehicles=6,
+            rounds=args.rounds, local_steps=2,
+            lora=LoRAConfig(rank=4, max_rank=8, candidate_ranks=(2, 4, 8)),
+            checkpoint=CheckpointSpec(interval=1, dir=ckpt_dir),
+            seed=0)
+        sim = IoVSimulator(cfg)
+        t0 = time.time()
+        sim.run()
+        print(f"trained {cfg.num_tasks} tasks × {args.rounds} rounds "
+              f"in {time.time() - t0:.1f}s (checkpoints in {ckpt_dir})")
 
-    @jax.jit
-    def step(tok, caches, pos):
-        return T.decode_step(params, None, cfg, lora, tok, caches, pos,
-                             sliding_window=args.window)
+        # -- serve the trained adapters straight from the checkpoint ----
+        spec = ServeSpec(max_batch=args.lanes, cache_len=args.tokens + 8)
+        store = AdapterStore.from_checkpoint(cfg, ckpt_dir, spec=spec)
+        # the frozen base weights are reproducible from the config seed —
+        # exactly how IoVSimulator builds them
+        params = T.init_params(jax.random.PRNGKey(cfg.seed), sim.model_cfg,
+                               dtype=jnp.float32)
+        engine = ServeEngine(params, sim.model_cfg, cfg.lora, spec)
 
-    tok = jnp.ones((args.batch, 1), jnp.int32)
-    t0 = time.time()
-    toks_out = []
-    for pos in range(args.tokens):
-        logits, caches = step(tok, caches, jnp.asarray(pos, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        toks_out.append(np.asarray(tok)[:, 0])
-    dt = time.time() - t0
-    print(f"decoded {args.batch}×{args.tokens} tokens in {dt:.1f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s, ring buffer "
-          f"window={args.window})")
-    print("sample stream:", np.stack(toks_out, 1)[0][:16])
+        # one tenant per lane: cycle tasks × ranks (mixed-rank batch)
+        ranks = cfg.lora.candidate_ranks
+        for lane in range(engine.max_batch):
+            task = lane % store.num_tasks
+            paged = store.get(task, rank=ranks[lane % len(ranks)])
+            engine.assign(lane, paged)
+            print(f"lane {lane}: task {paged.task} rsu {paged.rsu} "
+                  f"v{paged.version} rank {paged.rank} "
+                  f"(slot {paged.slot_rank})")
+
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, sim.model_cfg.vocab_size,
+                               (engine.max_batch, 4))
+        t0 = time.time()
+        gen = engine.generate(prompts, args.tokens // 2)
+
+        # hot-swap every lane to a different tenant mid-service: new task,
+        # new rank — same compiled program
+        for lane in range(engine.max_batch):
+            task = (lane + 1) % store.num_tasks
+            paged = store.get(task, rank=ranks[(lane + 1) % len(ranks)])
+            engine.assign(lane, paged)
+        gen2 = engine.generate(prompts, args.tokens - args.tokens // 2)
+        dt = time.time() - t0
+
+        total = gen.shape[1] + gen2.shape[1] + 2 * (prompts.shape[1] - 1)
+        print(f"served {engine.max_batch} lanes × {total} steps in "
+              f"{dt:.1f}s ({engine.max_batch * total / dt:.1f} tok/s), "
+              f"{engine.swaps} hot swaps, "
+              f"{engine.compile_count} decode compile(s), "
+              f"adapter cache {store.cache.hits} hits / "
+              f"{store.cache.misses} misses")
+        print("sample stream:", np.concatenate([gen[0], gen2[0]])[:16])
 
 
 if __name__ == "__main__":

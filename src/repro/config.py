@@ -484,6 +484,47 @@ class CheckpointSpec:
 
 
 @dataclass(frozen=True)
+class ServeSpec:
+    """Multi-tenant serving tier configuration (DESIGN.md §5).
+
+    The serve engine (``repro.launch.serve.ServeEngine``) runs ONE compiled
+    decode program over ``max_batch`` lanes. Each lane carries its own
+    KV/SSM cache slice and a rank-padded adapter slot of width
+    ``max_rank`` columns: an adapter of any trained rank r ≤ max_rank is
+    zero-padded into the slot (pad tails are exact no-ops under x·A·B), and
+    its LoRA scale α/r rides along as a *traced* scalar — so hot-swapping
+    adapters of different ranks never changes the program's shapes or
+    statics, and the decode jit cache holds exactly one entry.
+
+    ``max_rank=0`` resolves to the training ``LoRAConfig.max_rank`` (the
+    server's truncated-SVD depth, which bounds every distributed rank).
+    ``cache_capacity`` bounds the host-side adapter cache — entries keyed
+    ``(task, rsu, version)`` — not device memory.
+    """
+    max_batch: int = 4           # concurrent decode lanes (tenants)
+    cache_len: int = 128         # per-lane KV/state cache length (tokens)
+    max_rank: int = 0            # adapter slot width; 0 ⇒ lora.max_rank
+    cache_capacity: int = 32     # host adapter-cache entries (LRU-bounded)
+    sliding_window: Optional[int] = None   # cap attention window at decode
+    donate: bool = True          # donate lane caches into the decode step
+
+    def resolve_max_rank(self, lora: "LoRAConfig") -> int:
+        return self.max_rank if self.max_rank > 0 else lora.max_rank
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.cache_len < 1:
+            raise ValueError("cache_len must be >= 1")
+        if self.max_rank < 0:
+            raise ValueError("max_rank must be >= 0 (0 = lora.max_rank)")
+        if self.cache_capacity < 1:
+            raise ValueError("cache_capacity must be >= 1")
+        if self.sliding_window is not None and self.sliding_window < 1:
+            raise ValueError("sliding_window must be >= 1 or None")
+
+
+@dataclass(frozen=True)
 class OutageSpec:
     """RSU coverage outage: RSU ``rsu_id`` has zero effective radius for
     round indices ``start <= round < end`` (0-based). Vehicles lose coverage

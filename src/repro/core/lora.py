@@ -171,6 +171,30 @@ def truncate_adapter_tree(adapters: Any, rank: int) -> Any:
     return out
 
 
+def pad_adapter_tree(adapters: Any, max_rank: int) -> Any:
+    """Zero-pad a rank-r adapter tree out to `max_rank` — the exact inverse
+    of :func:`truncate_adapter_tree`. The zero tail is a no-op under
+    x·A·B, so the padded tree decodes bit-identically to the original
+    (the serving tier pages every adapter into max_rank-wide slots on the
+    strength of this invariant)."""
+    rank = tree_rank(adapters)
+    if rank > max_rank:
+        raise ValueError(
+            f"adapter rank {rank} exceeds slot width max_rank={max_rank}")
+    if rank == max_rank:
+        return adapters
+    from repro.core.aggregation import tree_paths, tree_get, tree_set
+    pad = max_rank - rank
+    out = adapters
+    for path in tree_paths(adapters):
+        ad = tree_get(out, path)
+        pa = [(0, 0)] * (ad["a"].ndim - 1) + [(0, pad)]
+        pb = [(0, 0)] * (ad["b"].ndim - 2) + [(0, pad), (0, 0)]
+        out = tree_set(out, path, {"a": jnp.pad(ad["a"], pa),
+                                   "b": jnp.pad(ad["b"], pb)})
+    return out
+
+
 def tree_rank(adapters: Any) -> int:
     """Rank of an adapter tree (all adapters share the client's rank).
 

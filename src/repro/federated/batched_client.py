@@ -97,45 +97,10 @@ def _bucket(n: int) -> int:
     return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
 
 
-class IdentityLRU:
-    """Bounded identity-keyed cache for unhashable host objects (pytrees).
-
-    Keys on ``(id(obj), extra)`` but stores the key object and verifies
-    identity on lookup — a bare ``id()`` key could be recycled by a later
-    allocation and silently serve another object's data. Evicts least-
-    recently-used entries at ``maxsize``, so long-lived trainers hold at
-    most ``maxsize`` strong references to key/value trees no matter how
-    many rounds (or simulators) pass through them. (The previous scheme
-    kept every entry until an unbounded dict crossed a clear() threshold —
-    each entry pinning a full base-weight or eval-batch tree alive.)
-    """
-
-    def __init__(self, maxsize: int):
-        from collections import OrderedDict
-        self.maxsize = int(maxsize)
-        self._d: "OrderedDict[Tuple[int, Any], Tuple[Any, Any]]" = \
-            OrderedDict()
-        self._lock = threading.Lock()
-
-    def __len__(self) -> int:
-        return len(self._d)
-
-    def get(self, obj: Any, extra: Any = None) -> Optional[Any]:
-        key = (id(obj), extra)
-        with self._lock:
-            hit = self._d.get(key)
-            if hit is None or hit[0] is not obj:
-                return None
-            self._d.move_to_end(key)
-            return hit[1]
-
-    def put(self, obj: Any, value: Any, extra: Any = None) -> None:
-        key = (id(obj), extra)
-        with self._lock:
-            self._d[key] = (obj, value)
-            self._d.move_to_end(key)
-            while len(self._d) > self.maxsize:
-                self._d.popitem(last=False)
+# Promoted to repro.core.cache so the serving tier's adapter cache shares
+# the same bounded-LRU machinery; re-exported here because long-standing
+# callers (and pickled references) import it from this module.
+from repro.core.cache import IdentityLRU  # noqa: E402  (re-export)
 
 
 def _concat_chunks(parts: Sequence[Tuple[Any, Dict[str, np.ndarray]]]

@@ -1,0 +1,248 @@
+"""Adapter paging for the multi-tenant serving tier (DESIGN.md §5).
+
+The fleet trains per-task LoRA state on the RSU hierarchy; serving needs a
+*deployable adapter* per (task, RSU) at some rank r from the candidate set.
+This module is the bridge:
+
+:class:`AdapterStore`
+    Reads the trained server state — a live :class:`IoVSimulator`
+    (``from_sim``) or a resumable-horizon checkpoint (``from_checkpoint``)
+    — and materializes adapters on demand. For the paper's method the
+    store runs the SAME truncated-SVD redistribution a vehicle would
+    receive (``aggregation.redistribute`` with ``seed = round``), computed
+    ONCE at max_rank per ``(task, rsu, version)`` and cached: SVD
+    truncation nests, so the rank-r factors are exactly the first r
+    columns of the cached max_rank factors — one SVD serves every rank.
+
+:class:`AdapterCache`
+    The bounded host-side cache behind the store, keyed
+    ``(task, rsu, version)`` on the shared LRU machinery promoted from the
+    batched trainer (:mod:`repro.core.cache`). The version — the server
+    round the state was captured at — is part of the key, so a stale hit
+    is structurally impossible: bumping the version changes the key, and
+    the old entry ages out of the LRU.
+
+:class:`PagedAdapter`
+    What the store hands the serve engine: the rank-r tree zero-padded
+    into a ``slot_rank``-wide slot (pad tails are exact no-ops under
+    x·A·B — the PR 2 rank-padding invariant) plus the LoRA scale to
+    thread through decode as a traced scalar. Every PagedAdapter of a
+    given slot width has identical shapes, so hot-swapping one into a
+    compiled decode program never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LoRAConfig, ModelConfig, ServeSpec
+from repro.core import aggregation as agg
+from repro.core import lora as lora_lib
+from repro.core.cache import LRUCache
+
+# rsu index meaning "the task's global (synced) state, not a partial"
+GLOBAL_RSU = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedAdapter:
+    """A rank-r adapter paged into a slot_rank-wide slot (zero tail)."""
+    task: int
+    rsu: int
+    version: int
+    rank: int
+    slot_rank: int
+    scale: float
+    adapters: Any          # padded tree: every 'a' leaf (..., slot_rank)
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.task, self.rsu, self.version)
+
+
+class AdapterCache:
+    """``(task, rsu, version)``-keyed cache of max_rank adapter trees.
+
+    Thin composition over the promoted :class:`repro.core.cache.LRUCache`;
+    values are the full max_rank trees (the expensive artifact — one SVD
+    per key for the paper's method), from which any rank pages for free.
+    """
+
+    def __init__(self, capacity: int):
+        self._lru = LRUCache(capacity)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def hits(self) -> int:
+        return self._lru.hits
+
+    @property
+    def misses(self) -> int:
+        return self._lru.misses
+
+    def get_or_load(self, task: int, rsu: int, version: int, loader):
+        return self._lru.get_or_load((task, rsu, version), loader)
+
+
+def _resolve_model_cfg(sim_cfg) -> ModelConfig:
+    if sim_cfg.train_arch is not None:
+        return sim_cfg.train_arch
+    from repro.configs import vit_base_paper
+    return vit_base_paper.reduced()
+
+
+class AdapterStore:
+    """Trained federated state → servable, rank-paged adapters.
+
+    ``servers`` is a list (one per task) of plain dicts with the RSUServer
+    state fields the store consumes: ``round``, ``merged``,
+    ``global_adapters``, ``partials``, ``partial_w`` — exactly the shape
+    :func:`repro.checkpoint.carry.host_state` serializes, so a live sim
+    and a restored checkpoint feed the same code path.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, lora: LoRAConfig,
+                 method: str, servers: List[dict],
+                 spec: Optional[ServeSpec] = None):
+        self.model_cfg = model_cfg
+        self.lora = lora
+        self.method = method
+        self.servers = servers
+        self.spec = spec or ServeSpec()
+        self.slot_rank = self.spec.resolve_max_rank(lora)
+        self.cache = AdapterCache(self.spec.cache_capacity)
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def from_sim(cls, sim, spec: Optional[ServeSpec] = None
+                 ) -> "AdapterStore":
+        from repro.federated.baselines import server_method
+        servers = [{
+            "round": srv.round,
+            "merged": srv.merged,
+            "global_adapters": srv.global_adapters,
+            "partials": srv.partials,
+            "partial_w": np.asarray(srv.partial_w),
+        } for srv in sim.servers]
+        return cls(sim.model_cfg, sim.cfg.lora,
+                   server_method(sim.cfg.method), servers, spec)
+
+    @classmethod
+    def from_checkpoint(cls, sim_cfg, ckpt_dir: str,
+                        round_idx: Optional[int] = None,
+                        spec: Optional[ServeSpec] = None) -> "AdapterStore":
+        """Load server state straight from a resumable-horizon checkpoint
+        (no simulator rebuild). The stored config fingerprint must match
+        ``sim_cfg`` — serving from a checkpoint written by a different
+        config would pair adapters with the wrong backbone."""
+        from repro.checkpoint.carry import config_fingerprint
+        from repro.checkpoint.io import restore_round
+        from repro.federated.baselines import server_method
+        _, state = restore_round(ckpt_dir, round_idx, numpy=True)
+        meta = json.loads(bytes(state["meta"]).decode())
+        want = config_fingerprint(sim_cfg)
+        if meta["fingerprint"] != want:
+            raise ValueError(
+                "checkpoint was written by a DIFFERENT SimConfig "
+                f"(fingerprint {meta['fingerprint'][:12]}… != "
+                f"{want[:12]}…) — refusing to serve its adapters")
+        to_jnp = lambda t: (None if t is None
+                            else jax.tree_util.tree_map(jnp.asarray, t))
+        servers = [{
+            "round": int(sd["round"]),
+            "merged": to_jnp(sd["merged"]),
+            "global_adapters": to_jnp(sd["global_adapters"]),
+            "partials": (None if sd["partials"] is None
+                         else [to_jnp(p) for p in sd["partials"]]),
+            "partial_w": np.asarray(sd["partial_w"]),
+        } for sd in state["servers"]]
+        return cls(_resolve_model_cfg(sim_cfg), sim_cfg.lora,
+                   server_method(sim_cfg.method), servers, spec)
+
+    # -- queries --------------------------------------------------------
+    @property
+    def num_tasks(self) -> int:
+        return len(self.servers)
+
+    def version(self, task: int) -> int:
+        """Current version of a task's servable state = its server round."""
+        return int(self.servers[task]["round"])
+
+    def rsus(self, task: int) -> List[int]:
+        """Servable RSU ids for a task: GLOBAL_RSU plus every RSU whose
+        partial holds un-synced uploads."""
+        out = [GLOBAL_RSU]
+        srv = self.servers[task]
+        if srv["partials"] is not None:
+            for k, p in enumerate(srv["partials"]):
+                if p is not None and float(srv["partial_w"][k]) > 0.0:
+                    out.append(k)
+        return out
+
+    def _full_rank_tree(self, task: int, rsu: int, version: int) -> Any:
+        """The max_rank adapter tree for one cache key (the cached value)."""
+        srv = self.servers[task]
+        state = srv["merged"] if rsu == GLOBAL_RSU else None
+        if rsu != GLOBAL_RSU:
+            partials = srv["partials"]
+            if (partials is None or rsu >= len(partials)
+                    or partials[rsu] is None):
+                raise KeyError(f"task {task} has no partial for RSU {rsu}")
+            state = partials[rsu]
+        if self.method == "ours":
+            if state is None:
+                raise KeyError(f"task {task} has no trained merged state "
+                               "yet (run at least one round)")
+            # the SAME factors a vehicle at rank max_rank would receive
+            # this round (seed = version = server round); lower ranks are
+            # prefixes of these factors, so one SVD serves every rank
+            return agg.redistribute(state, rank=self.lora.max_rank,
+                                    scale=self.lora.scale,
+                                    max_rank=self.lora.max_rank,
+                                    seed=version)
+        ga = srv["global_adapters"] if rsu == GLOBAL_RSU else state
+        if ga is None:
+            raise KeyError(f"task {task} has no trained global adapters "
+                           "yet (run at least one round)")
+        return ga
+
+    def get(self, task: int, rsu: int = GLOBAL_RSU,
+            rank: Optional[int] = None,
+            version: Optional[int] = None) -> PagedAdapter:
+        """A rank-`rank` adapter paged into the store's slot width.
+
+        ``version=None`` serves the current state; passing an older
+        version only *hits* if that entry is still cached (the store keeps
+        no history) — it can never silently return newer state, because
+        the version is part of the cache key.
+        """
+        rank = self.lora.rank if rank is None else int(rank)
+        if not 1 <= rank <= self.slot_rank:
+            raise ValueError(f"rank {rank} outside slot [1, {self.slot_rank}]")
+        cur = self.version(task)
+        if version is None:
+            version = cur
+        elif version != cur:
+            probe = object()
+            hit = self.cache._lru.get((task, rsu, version), probe)
+            if hit is probe:
+                raise KeyError(
+                    f"version {version} of (task {task}, rsu {rsu}) is "
+                    f"no longer available (current is {cur})")
+        full = self.cache.get_or_load(
+            task, rsu, version,
+            lambda: self._full_rank_tree(task, rsu, version))
+        full_rank = lora_lib.tree_rank(full)
+        tree = (lora_lib.truncate_adapter_tree(full, rank)
+                if rank < full_rank else full)
+        tree = lora_lib.pad_adapter_tree(tree, self.slot_rank)
+        return PagedAdapter(task=task, rsu=rsu, version=int(version),
+                            rank=rank, slot_rank=self.slot_rank,
+                            scale=self.lora.scale, adapters=tree)

@@ -1,23 +1,38 @@
-"""Serving step factories: prefill (full-sequence forward) and decode
-(single-token with KV/state caches). Decode is what the `decode_32k` and
-`long_500k` input shapes lower (one new token against a seq_len cache;
-sub-quadratic archs use constant-size state, full-attention archs use the
-sliding-window variant for long_500k — DESIGN.md §5).
+"""Serving tier: prefill/decode step factories and the multi-tenant
+ServeEngine (DESIGN.md §5).
+
+The step factories lower prefill (full-sequence forward) and decode
+(single-token with KV/state caches) onto a device mesh — decode is what
+the `decode_32k` and `long_500k` input shapes lower (one new token against
+a seq_len cache; sub-quadratic archs use constant-size state, full-
+attention archs the sliding-window variant).
+
+:class:`ServeEngine` is the multi-tenant batched decode loop above them:
+``ServeSpec.max_batch`` lanes share ONE compiled decode program, each lane
+carrying its own cache slice and a rank-padded adapter slot. Adapters of
+any trained rank r ≤ slot width page in with zero tails (exact no-ops
+under x·A·B) and their LoRA scale rides as a traced scalar — so
+hot-swapping adapters across tenants, tasks, RSUs and ranks never changes
+the program: the decode jit cache holds exactly one entry
+(tests/test_serve.py pins this with a log_compiles guard).
 
 CLI example (batched requests on CPU with the reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tokens 32
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.config import LoRAConfig, ModelConfig
+from repro.config import LoRAConfig, ModelConfig, ServeSpec
+from repro.core import lora as lora_lib
 from repro.launch import sharding as sh
+from repro.launch.adapter_cache import PagedAdapter
 from repro.models import transformer as T
 
 
@@ -47,28 +62,202 @@ def make_prefill_step(cfg: ModelConfig, lora: LoRAConfig, mesh, *,
 
 def make_decode_step(cfg: ModelConfig, lora: LoRAConfig, mesh, *,
                      sliding_window=None, donate: bool = True,
-                     scan_unroll: int = 1):
-    def decode(params, adapters, token, caches, position):
-        logits, new_caches = T.decode_step(
-            params, adapters, cfg, lora, token, caches, position,
-            sliding_window=sliding_window, scan_unroll=scan_unroll)
-        return logits, new_caches
+                     scan_unroll: int = 1, traced_scale: bool = False):
+    """Decode step + jit builder.
 
-    def jit_decode(params, adapters, token, caches, position):
+    ``traced_scale=True`` appends a traced ``scale`` operand to the step
+    (replacing the static ``lora.scale``): with rank-padded adapter slots
+    this is what lets ONE compiled decode program serve adapters of every
+    rank — α/r changes per swap, the program does not.
+    """
+    if traced_scale:
+        def decode(params, adapters, token, caches, position, scale):
+            logits, new_caches = T.decode_step(
+                params, adapters, cfg, lora, token, caches, position,
+                sliding_window=sliding_window, scan_unroll=scan_unroll,
+                scale=scale)
+            return logits, new_caches
+    else:
+        def decode(params, adapters, token, caches, position):
+            logits, new_caches = T.decode_step(
+                params, adapters, cfg, lora, token, caches, position,
+                sliding_window=sliding_window, scan_unroll=scan_unroll)
+            return logits, new_caches
+
+    def jit_decode(params, adapters, token, caches, position, scale=None):
         ps = sh.tree_shardings(mesh, params)
         ads = (sh.tree_shardings(mesh, adapters, is_adapter=True)
                if adapters is not None else None)
         cs = sh.cache_shardings(mesh, caches)
         dp = sh._dp_for(mesh, token.shape[0])
         tok_sh = NamedSharding(mesh, P(dp, None))
-        pos_sh = NamedSharding(mesh, P())
+        rep_sh = NamedSharding(mesh, P())
         out_sh = (NamedSharding(mesh, P(dp, None, "model")), cs)
-        return jax.jit(decode,
-                       in_shardings=(ps, ads, tok_sh, cs, pos_sh),
-                       out_shardings=out_sh,
+        in_sh = (ps, ads, tok_sh, cs, rep_sh)
+        if traced_scale:
+            in_sh = in_sh + (rep_sh,)
+        return jax.jit(decode, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=(3,) if donate else ())
 
     return decode, jit_decode
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant serving engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Batched multi-tenant decode over rank-padded adapter slots.
+
+    Each of the ``spec.max_batch`` lanes serves one tenant: a
+    :class:`PagedAdapter` (task/RSU/version at any rank ≤ the slot width)
+    plus its own cache slice and position counter. The decode program is
+    ``vmap`` over lanes of the single-sequence :func:`T.decode_step` with
+    a per-lane traced scale, jitted ONCE — assigning a different adapter,
+    rank, or tenant to a lane is a pure data swap (``.at[lane].set``).
+
+    Unassigned lanes hold zero adapters at zero scale — exact base-model
+    decode — so a partially occupied engine is always safe to step.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, lora: LoRAConfig,
+                 spec: Optional[ServeSpec] = None, *,
+                 dtype=jnp.float32, scan_unroll: int = 1):
+        self.cfg = cfg
+        self.lora = lora
+        self.spec = spec or ServeSpec()
+        self.params = params
+        self.slot_rank = self.spec.resolve_max_rank(lora)
+        self.dtype = dtype
+        B = self.spec.max_batch
+        # statics the compiled step closes over: the slot-width LoRAConfig
+        # only contributes shapes (scale is traced), so it never varies
+        slot_lora = dataclasses.replace(lora, rank=self.slot_rank,
+                                        max_rank=self.slot_rank)
+        zero = jax.tree_util.tree_map(
+            jnp.zeros_like,
+            T.init_adapters(jax.random.PRNGKey(0), cfg, slot_lora))
+        self._zero_adapter = zero
+        self._adapters = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (B,) + x.shape) + 0, zero)
+        self._scales = np.zeros(B, np.float32)
+        self._cache0 = T.init_caches(cfg, 1, self.spec.cache_len,
+                                     dtype=dtype)
+        self._caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (B,) + x.shape) + 0, self._cache0)
+        self._positions = np.zeros(B, np.int32)
+        self.assigned: Dict[int, Optional[PagedAdapter]] = \
+            {i: None for i in range(B)}
+        self.swaps = 0
+
+        window = self.spec.sliding_window
+
+        def lane(params, ad, scale, token, caches, position):
+            logits, nc = T.decode_step(
+                params, ad, cfg, slot_lora, token.reshape(1, 1), caches,
+                position, sliding_window=window, scan_unroll=scan_unroll,
+                scale=scale)
+            return logits[0, 0], nc
+
+        vlane = jax.vmap(lane, in_axes=(None, 0, 0, 0, 0, 0))
+
+        self._traces = 0
+
+        def serve_decode(params, adapters, scales, tokens, caches,
+                         positions):
+            # host-side body: runs ONLY when jax (re)traces the program,
+            # so this counter is the number of compiled decode variants
+            self._traces += 1
+            return vlane(params, adapters, scales, tokens, caches,
+                         positions)
+
+        # Pin explicit input shardings: the jit cache key must not depend
+        # on whether an argument is committed (host-side lane surgery —
+        # assign/reset_lane scatters — commits the caches/adapters, while
+        # fresh init arrays and jit outputs are uncommitted; without the
+        # pin the FIRST step after a reset re-lowers the whole program).
+        one_dev = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        self._decode = jax.jit(
+            serve_decode,
+            in_shardings=(one_dev,) * 6,
+            donate_argnums=(4,) if self.spec.donate else ())
+
+    # -- tenancy --------------------------------------------------------
+    @property
+    def max_batch(self) -> int:
+        return self.spec.max_batch
+
+    def assign(self, lane: int, paged: PagedAdapter, *,
+               reset: bool = True) -> None:
+        """Hot-swap `paged` into `lane`. Pure data movement: no shapes or
+        statics change, so the compiled decode program is untouched."""
+        if paged.slot_rank != self.slot_rank:
+            raise ValueError(
+                f"adapter paged for slot width {paged.slot_rank}, engine "
+                f"slot width is {self.slot_rank}")
+        self._adapters = jax.tree_util.tree_map(
+            lambda full, one: full.at[lane].set(one.astype(full.dtype)),
+            self._adapters, paged.adapters)
+        self._scales[lane] = paged.scale
+        self.assigned[lane] = paged
+        self.swaps += 1
+        if reset:
+            self.reset_lane(lane)
+
+    def evict(self, lane: int, *, reset: bool = True) -> None:
+        """Return `lane` to base-model decode (zero adapter, zero scale)."""
+        self._adapters = jax.tree_util.tree_map(
+            lambda full, one: full.at[lane].set(one),
+            self._adapters, self._zero_adapter)
+        self._scales[lane] = 0.0
+        self.assigned[lane] = None
+        if reset:
+            self.reset_lane(lane)
+
+    def reset_lane(self, lane: int) -> None:
+        """Fresh cache + position 0 for `lane` (new request)."""
+        self._caches = jax.tree_util.tree_map(
+            lambda c, z: c.at[lane].set(z.astype(c.dtype)),
+            self._caches, self._cache0)
+        self._positions[lane] = 0
+
+    # -- decode ---------------------------------------------------------
+    def step(self, tokens: Sequence[int]) -> jnp.ndarray:
+        """Decode one token on every lane. tokens: (max_batch,) ints.
+        Returns per-lane next-token logits, shape (max_batch, vocab)."""
+        toks = jnp.asarray(np.asarray(tokens, np.int32).reshape(
+            self.spec.max_batch))
+        logits, self._caches = self._decode(
+            self.params, self._adapters, jnp.asarray(self._scales),
+            toks, self._caches, jnp.asarray(self._positions))
+        self._positions += 1
+        return logits
+
+    def generate(self, prompts: np.ndarray, num_tokens: int) -> np.ndarray:
+        """Greedy-decode `num_tokens` per lane after teacher-forcing the
+        prompts. prompts: (max_batch, P) ints. Returns (max_batch,
+        num_tokens) generated ids."""
+        prompts = np.asarray(prompts)
+        assert prompts.shape[0] == self.spec.max_batch
+        tok = prompts[:, 0]
+        out = []
+        for i in range(prompts.shape[1] + num_tokens - 1):
+            logits = self.step(tok)
+            if i + 1 < prompts.shape[1]:
+                tok = prompts[:, i + 1]
+            else:
+                tok = np.asarray(jnp.argmax(logits, axis=-1))
+                out.append(tok)
+        return np.stack(out, axis=1)
+
+    @property
+    def compile_count(self) -> int:
+        """Traced-and-compiled variants of the decode program (the
+        contract: 1). Counted by retraces of the jitted body — the C++
+        fastpath may key extra cache entries on input provenance
+        (committed/fresh) that all share ONE lowering, so the private
+        ``_cache_size`` would overcount."""
+        return self._traces
 
 
 # ---------------------------------------------------------------------------
@@ -79,8 +268,6 @@ def main():
     import argparse
     import importlib
     import time
-
-    import numpy as np
 
     parser = argparse.ArgumentParser()
     parser.add_argument("--arch", default="qwen2-0.5b")
@@ -102,24 +289,35 @@ def main():
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
 
-    decode = jax.jit(functools.partial(T.decode_step, cfg=cfg, lora=lora))
+    traces = [0]
 
-    # prefill via repeated decode (simple reference path on CPU)
+    def _decode_body(params, adapters, tok, caches, pos):
+        traces[0] += 1          # runs only on (re)trace
+        return T.decode_step(params, adapters, cfg, lora, tok, caches,
+                             pos)
+
+    decode = jax.jit(_decode_body)
+
+    # prefill via repeated decode (simple reference path on CPU), then
+    # greedy generation — every token through the SAME jitted step
     t0 = time.time()
     tok = jnp.asarray(prompt[:, :1], jnp.int32)
     outs = []
     for pos in range(clen - 1):
-        logits, caches = T.decode_step(params, None, cfg, lora, tok, caches,
-                                       jnp.asarray(pos, jnp.int32))
+        logits, caches = decode(params, None, tok, caches,
+                                jnp.asarray(pos, jnp.int32))
         if pos + 1 < args.prompt_len:
             tok = jnp.asarray(prompt[:, pos + 1:pos + 2], jnp.int32)
         else:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             outs.append(np.asarray(tok)[:, 0])
+    jax.block_until_ready(caches)
     dt = time.time() - t0
     gen = np.stack(outs, 1)
+    compiles = traces[0]
     print(f"served {B} requests × {gen.shape[1]} tokens in {dt:.1f}s "
-          f"({B * gen.shape[1] / dt:.1f} tok/s)")
+          f"({B * gen.shape[1] / dt:.1f} tok/s, "
+          f"{compiles} decode compile{'s' if compiles != 1 else ''})")
     print("sample:", gen[0][:16])
 
 

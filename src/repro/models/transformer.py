@@ -531,14 +531,19 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
 
 def decode_step(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
                 token: jnp.ndarray, caches, position, *,
-                sliding_window=None, scan_unroll: int = 1
+                sliding_window=None, scan_unroll: int = 1, scale=None
                 ) -> Tuple[jnp.ndarray, Any]:
     """One-token decode. token: (B,1) int32; position: scalar int32 —
     absolute position of the new token; cache write slot = position % len.
 
+    ``scale=None`` uses the static ``lora.scale``; passing a scale (which
+    may be a TRACED scalar, mirroring :func:`forward`) lets one compiled
+    decode program serve adapters of different ranks — the serving tier
+    pages rank-r adapters into rank-padded slots and threads α/r here.
+
     Returns (logits (B,1,V), new_caches).
     """
-    scale = lora.scale
+    scale = lora.scale if scale is None else scale
     x = jnp.take(params["embed"], token, axis=0)
     B = x.shape[0]
     positions = jnp.broadcast_to(

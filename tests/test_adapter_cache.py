@@ -1,0 +1,268 @@
+"""Adapter-cache and LRU contracts for the serving tier.
+
+The promoted :class:`repro.core.cache.IdentityLRU` (lifted out of
+``federated/batched_client.py`` — the old import path is pinned as a
+re-export) and the ``(task, rsu, version)``-keyed adapter store built on
+the same LRU machinery. Hypothesis properties model-check the LRU against
+a reference OrderedDict; deterministic twins keep the invariants pinned
+when hypothesis is unavailable (it is an optional dev dependency).
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CheckpointSpec, LoRAConfig, ServeSpec
+from repro.core import lora as lora_lib
+from repro.core.cache import IdentityLRU, LRUCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYP = False
+
+    class _Stub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Stub()
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+FAST = dict(max_examples=50, deadline=None)
+hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# The promoted IdentityLRU (and its old import path)
+# ---------------------------------------------------------------------------
+
+def test_identitylru_reexported_at_old_path():
+    """Long-standing callers import IdentityLRU from batched_client; the
+    promotion to core.cache must keep that path aliased to the SAME class."""
+    from repro.core.cache import IdentityLRU as promoted
+    from repro.federated.batched_client import IdentityLRU as legacy
+    assert legacy is promoted
+
+
+def test_identitylru_capacity_and_eviction_order():
+    cache = IdentityLRU(maxsize=2)
+    a, b, c = object(), object(), object()
+    cache.put(a, "A")
+    cache.put(b, "B")
+    assert len(cache) == 2
+    # touch a so b becomes least-recently-used, then push past capacity
+    assert cache.get(a) == "A"
+    cache.put(c, "C")
+    assert len(cache) == 2
+    assert cache.get(b) is None        # b evicted (LRU), not a
+    assert cache.get(a) == "A"
+    assert cache.get(c) == "C"
+
+
+def test_identitylru_hit_returns_identical_object():
+    cache = IdentityLRU(maxsize=4)
+    key_obj = {"k": 1}                 # unhashable host object
+    value = [1, 2, 3]
+    cache.put(key_obj, value)
+    assert cache.get(key_obj) is value
+    # an EQUAL but distinct object is a different identity: must miss
+    assert cache.get({"k": 1}) is None
+
+
+def test_identitylru_extra_key_separates_entries():
+    cache = IdentityLRU(maxsize=4)
+    obj = object()
+    cache.put(obj, "x", extra=1)
+    cache.put(obj, "y", extra=2)
+    assert cache.get(obj, extra=1) == "x"
+    assert cache.get(obj, extra=2) == "y"
+    assert cache.get(obj) is None
+
+
+@hyp
+@settings(**FAST)
+@given(st.lists(st.tuples(st.sampled_from(["put", "get"]),
+                          st.integers(0, 7)), max_size=60),
+       st.integers(1, 5))
+def test_identitylru_matches_ordereddict_model(ops, maxsize):
+    """Model check: IdentityLRU over a fixed object pool behaves exactly
+    like a recency-ordered dict bounded to maxsize."""
+    from collections import OrderedDict
+    pool = [object() for _ in range(8)]
+    cache = IdentityLRU(maxsize=maxsize)
+    model = OrderedDict()
+    for op, i in ops:
+        obj = pool[i]
+        if op == "put":
+            cache.put(obj, i)
+            model[id(obj)] = i
+            model.move_to_end(id(obj))
+            while len(model) > maxsize:
+                model.popitem(last=False)
+        else:
+            got = cache.get(obj)
+            want = model.get(id(obj))
+            if want is not None:
+                model.move_to_end(id(obj))
+            assert got == want
+        assert len(cache) == len(model) <= maxsize
+
+
+def test_identitylru_deterministic_model_twin():
+    """Deterministic twin of the hypothesis model check (always runs)."""
+    rng = np.random.default_rng(0)
+    pool = [object() for _ in range(6)]
+    cache = IdentityLRU(maxsize=3)
+    from collections import OrderedDict
+    model = OrderedDict()
+    for _ in range(200):
+        i = int(rng.integers(0, 6))
+        if rng.random() < 0.5:
+            cache.put(pool[i], i)
+            model[id(pool[i])] = i
+            model.move_to_end(id(pool[i]))
+            while len(model) > 3:
+                model.popitem(last=False)
+        else:
+            got = cache.get(pool[i])
+            want = model.get(id(pool[i]))
+            if want is not None:
+                model.move_to_end(id(pool[i]))
+            assert got == want
+        assert len(cache) == len(model) <= 3
+
+
+def test_lrucache_get_or_load_loads_once():
+    cache = LRUCache(maxsize=4)
+    calls = []
+
+    def loader():
+        calls.append(1)
+        return "value"
+
+    assert cache.get_or_load("k", loader) == "value"
+    assert cache.get_or_load("k", loader) == "value"
+    assert len(calls) == 1
+    assert cache.hits == 1 and cache.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# (task, rsu, version)-keyed adapter store
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained():
+    """One tiny trained fleet + a checkpoint of it (shared by the store
+    tests — training dominates this module's runtime)."""
+    from repro.checkpoint.carry import save_checkpoint
+    from repro.sim.simulator import IoVSimulator, SimConfig
+    cfg = SimConfig(method="ours", num_tasks=1, num_vehicles=4, rounds=1,
+                    local_steps=1,
+                    lora=LoRAConfig(rank=4, max_rank=8,
+                                    candidate_ranks=(2, 4, 8)),
+                    seed=0)
+    sim = IoVSimulator(cfg)
+    sim.run()
+    tmp = tempfile.mkdtemp()
+    save_checkpoint(sim, ckpt_dir=tmp)
+    return cfg, sim, tmp
+
+
+def test_store_versioned_keying_no_stale_hits(trained):
+    """A version bump changes the cache KEY: the store can never serve
+    yesterday's adapters for today's version, and an explicitly requested
+    old version either hits its own entry or raises — never aliases."""
+    from repro.launch.adapter_cache import AdapterStore
+    cfg, sim, _ = trained
+    store = AdapterStore.from_sim(sim, spec=ServeSpec(cache_capacity=2))
+    v0 = store.version(0)
+    old = store.get(0, rank=4)
+    assert old.version == v0
+    assert store.cache.misses == 1
+
+    # bump the served state: new round index + perturbed merged delta
+    store.servers[0]["round"] = v0 + 1
+    store.servers[0]["merged"] = jax.tree_util.tree_map(
+        lambda x: x * 1.5, store.servers[0]["merged"])
+    new = store.get(0, rank=4)
+    assert new.version == v0 + 1
+    assert store.cache.misses == 2              # the bump cannot hit v0
+    same_a = jax.tree_util.tree_leaves(old.adapters)[0]
+    new_a = jax.tree_util.tree_leaves(new.adapters)[0]
+    assert not bool(jnp.array_equal(same_a, new_a))
+
+    # the old version is still cached (capacity 2) — an explicit request
+    # returns exactly the old bits
+    still = store.get(0, rank=4, version=v0)
+    assert still.version == v0
+    assert bool(jnp.array_equal(
+        jax.tree_util.tree_leaves(still.adapters)[0], same_a))
+
+    # age v0 out of the capacity-2 LRU, then an explicit request raises
+    store.servers[0]["round"] = v0 + 2
+    store.get(0, rank=4)
+    store.servers[0]["round"] = v0 + 3
+    store.get(0, rank=4)
+    with pytest.raises(KeyError):
+        store.get(0, rank=4, version=v0)
+
+
+def test_store_pages_every_rank_from_one_cached_svd(trained):
+    """Rank-r pages are prefixes of the cached max_rank redistribution
+    (SVD truncation nests), zero-padded to the slot: one cache entry —
+    ONE SVD — serves the whole candidate set."""
+    from repro.launch.adapter_cache import AdapterStore
+    cfg, sim, _ = trained
+    store = AdapterStore.from_sim(sim)
+    full = store.get(0, rank=8)
+    assert store.cache.misses == 1
+    for rank in (2, 4):
+        paged = store.get(0, rank=rank)
+        assert store.cache.misses == 1          # same key: no new SVD
+        assert paged.rank == rank and paged.slot_rank == store.slot_rank
+        # paged tree == truncate(full, rank) re-padded, bit for bit
+        want = lora_lib.pad_adapter_tree(
+            lora_lib.truncate_adapter_tree(full.adapters, rank),
+            store.slot_rank)
+        assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+            lambda a, b: bool(jnp.array_equal(a, b)),
+            paged.adapters, want))
+        # and its zero tail really is zero
+        tail = jax.tree_util.tree_leaves(
+            lora_lib.mask_adapter_tree(
+                paged.adapters,
+                1.0 - lora_lib.rank_arange_mask(
+                    jnp.asarray(rank), store.slot_rank)))
+        assert all(float(jnp.abs(x).max()) == 0.0 for x in tail
+                   if x.size)
+
+
+def test_store_from_checkpoint_matches_from_sim(trained):
+    """The checkpoint bridge serves the SAME bits as the live simulator
+    (train → checkpoint → serve loses nothing)."""
+    from repro.launch.adapter_cache import AdapterStore
+    cfg, sim, ckpt_dir = trained
+    live = AdapterStore.from_sim(sim).get(0, rank=4)
+    restored = AdapterStore.from_checkpoint(cfg, ckpt_dir).get(0, rank=4)
+    assert restored.version == live.version
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)),
+        live.adapters, restored.adapters))
+
+
+def test_store_from_checkpoint_rejects_foreign_config(trained):
+    from repro.launch.adapter_cache import AdapterStore
+    cfg, _, ckpt_dir = trained
+    other = dataclasses.replace(cfg, seed=cfg.seed + 1)
+    with pytest.raises(ValueError, match="DIFFERENT SimConfig"):
+        AdapterStore.from_checkpoint(other, ckpt_dir)
