@@ -3,18 +3,21 @@
 Compares a freshly measured BENCH_serve_decode*.json against the committed
 baseline and fails (exit 1) when:
 
-  - a batch-width cell present in the baseline is missing from the fresh
-    run,
+  - a (batch, paged) cell present in the baseline is missing from the
+    fresh run, or a baseline cell's churn sub-cell went missing,
   - any cell's decode compile count exceeds 1 — the one-compile contract:
-    mixed-rank adapter hot-swaps must be pure data movement, a second
-    compile means a shape or static leaked into the swap path,
+    mixed-rank adapter hot-swaps AND continuous-batching churn (admit/
+    retire, block growth, recycling) must be pure data movement; a second
+    compile means a shape or static leaked into the serve path,
   - a cell stopped hot-swapping or its adapter cache stopped hitting
-    (the paging/cache machinery silently bypassed), or
-  - throughput drops below --tolerance × baseline tok/s. Absolute tok/s
-    on shared CI runners is noisy, so the default tolerance is loose
-    (0.4×) — it catches structural collapses (e.g. a recompile or a
-    host sync per token), not scheduler jitter. The structural checks
-    above are the teeth.
+    (the paging/cache machinery silently bypassed),
+  - a paged cell whose baseline recycled blocks reports a ZERO block
+    reuse rate — retire→admit recycling silently broke, or
+  - steady-state or churn-storm throughput drops below
+    --tolerance × baseline tok/s. Absolute tok/s on shared CI runners is
+    noisy, so the default tolerance is loose (0.4×) — it catches
+    structural collapses (e.g. a recompile or a host sync per token),
+    not scheduler jitter. The structural checks above are the teeth.
 
 Usage:
     python -m benchmarks.check_serve_regression \
@@ -29,7 +32,12 @@ import sys
 
 
 def _cells(payload):
-    return {int(r["batch"]): r for r in payload.get("results", [])}
+    return {(int(r["batch"]), bool(r.get("paged", False))): r
+            for r in payload.get("results", [])}
+
+
+def _label(key):
+    return f"batch={key[0]} {'paged' if key[1] else 'dense'}"
 
 
 def check(baseline_path: str, current_path: str,
@@ -40,35 +48,61 @@ def check(baseline_path: str, current_path: str,
         cur = _cells(json.load(f))
 
     ok = True
-    for batch, b in sorted(base.items()):
-        c = cur.get(batch)
+    for key, b in sorted(base.items()):
+        name = _label(key)
+        c = cur.get(key)
         if c is None:
-            print(f"FAIL: batch={batch} cell missing from current run")
+            print(f"FAIL: {name} cell missing from current run")
             ok = False
             continue
 
         compiles = int(c["compile_count"])
         if compiles > 1:
-            print(f"FAIL: batch={batch} decode compiled {compiles}× — "
-                  "adapter hot-swap broke the one-compile contract")
+            print(f"FAIL: {name} decode compiled {compiles}× — tenant "
+                  "churn broke the one-compile contract")
             ok = False
 
         if int(b.get("swaps", 0)) > 0 and int(c.get("swaps", 0)) <= 0:
-            print(f"FAIL: batch={batch} baseline hot-swapped "
+            print(f"FAIL: {name} baseline hot-swapped "
                   f"({b['swaps']}×) but the current run never swapped")
             ok = False
         if int(b.get("cache_hits", 0)) > 0 and int(c.get("cache_hits", 0)) <= 0:
-            print(f"FAIL: batch={batch} adapter cache stopped hitting "
+            print(f"FAIL: {name} adapter cache stopped hitting "
                   f"(baseline {b['cache_hits']} hits, current 0)")
             ok = False
 
         b_tps, c_tps = float(b["tok_per_s"]), float(c["tok_per_s"])
         floor = b_tps * tolerance
         status = "ok" if c_tps >= floor else "REGRESSED"
-        print(f"batch={batch}: baseline {b_tps:.1f} tok/s  current "
+        print(f"{name}: baseline {b_tps:.1f} tok/s  current "
               f"{c_tps:.1f} tok/s  floor {floor:.1f}  "
               f"compiles={compiles}  [{status}]")
         if c_tps < floor:
+            ok = False
+
+        bch, cch = b.get("churn"), c.get("churn")
+        if bch is None:
+            continue
+        if cch is None:
+            print(f"FAIL: {name} churn sub-cell missing from current run")
+            ok = False
+            continue
+        if int(bch.get("admits", 0)) > 0 and int(cch.get("admits", 0)) <= 0:
+            print(f"FAIL: {name} churn storm stopped admitting tenants")
+            ok = False
+        if (float(bch.get("block_reuse_rate", 0.0)) > 0.0
+                and float(cch.get("block_reuse_rate", 0.0)) <= 0.0):
+            print(f"FAIL: {name} baseline recycled blocks "
+                  f"(reuse {bch['block_reuse_rate']}) but the current "
+                  "run never reused one — retire→admit recycling broke")
+            ok = False
+        bc_tps, cc_tps = float(bch["tok_per_s"]), float(cch["tok_per_s"])
+        cfloor = bc_tps * tolerance
+        status = "ok" if cc_tps >= cfloor else "REGRESSED"
+        print(f"{name} churn: baseline {bc_tps:.1f} tok/s  current "
+              f"{cc_tps:.1f} tok/s  floor {cfloor:.1f}  "
+              f"reuse={cch.get('block_reuse_rate', 0.0)}  [{status}]")
+        if cc_tps < cfloor:
             ok = False
     return 0 if ok else 1
 

@@ -6,11 +6,18 @@ and serves a token stream with periodic mid-stream tenant hot-swaps —
 every lane cycling through (task, rsu, version, rank) combinations while
 the compiled decode program stays fixed.
 
-Reported per batch-width cell:
+Each batch width runs TWO cells — dense ring-buffer caches and the
+block-paged engine (``ServeSpec.block_size > 0``) — and each cell ends
+with a continuous-batching churn storm: tenants admitted/retired
+mid-stream every few steps through ``AdapterStore.admit`` under the
+``evict_oldest`` policy. Reported per (batch, paged) cell:
   - tok/s (aggregate across lanes) and p50/p95 per-step latency,
-  - decode compile count (the one-compile contract: MUST be 1),
+  - decode compile count (the one-compile contract: MUST be 1 — churn,
+    block growth and recycling included),
   - hot-swap count and mean swap latency,
-  - adapter-cache hits/misses.
+  - adapter-cache hits/misses,
+  - churn sub-cell: storm tok/s + p95, admits/retires, and the block
+    reuse rate (recycled allocations / allocations; 0 for dense).
 
 Emits BENCH_serve_decode.json (or BENCH_serve_decode_smoke.json with
 --smoke); benchmarks/check_serve_regression.py gates CI on it.
@@ -44,9 +51,14 @@ def _train(smoke: bool) -> IoVSimulator:
     return sim
 
 
-def _serve_cell(sim, batch: int, tokens: int, swap_every: int
+def _serve_cell(sim, batch: int, tokens: int, swap_every: int,
+                block_size: int = 0, churn_every: int = 4
                 ) -> Dict[str, Any]:
-    spec = ServeSpec(max_batch=batch, cache_len=tokens + 8)
+    cache_len = tokens + 8
+    if block_size:
+        cache_len += (-cache_len) % block_size     # multiple of block_size
+    spec = ServeSpec(max_batch=batch, cache_len=cache_len,
+                     block_size=block_size, admission="evict_oldest")
     store = AdapterStore.from_sim(sim, spec=spec)
     engine = ServeEngine(sim.params, sim.model_cfg, sim.cfg.lora, spec)
     ranks = sim.cfg.lora.candidate_ranks
@@ -83,10 +95,30 @@ def _serve_cell(sim, batch: int, tokens: int, swap_every: int
         step_s.append(time.perf_counter() - t0)
         toks = np.asarray(np.argmax(logits, axis=-1))
 
+    # churn storm: admit a new tenant (evicting the oldest) every
+    # `churn_every` steps while the stream keeps decoding — the
+    # continuous-batching cost surface (and, paged, the block recycler)
+    churn_steps = max(tokens // 2, 2 * churn_every)
+    storm_s: List[float] = []
+    admits0, retires0 = engine.admits, engine.retires
+    for i in range(churn_steps):
+        if i % churn_every == 0:
+            store.admit(engine, next_tenant % store.num_tasks,
+                        rank=ranks[next_tenant % len(ranks)])
+            next_tenant += 1
+        t0 = time.perf_counter()
+        logits = engine.step(toks)
+        jax.block_until_ready(logits)
+        storm_s.append(time.perf_counter() - t0)
+        toks = np.asarray(np.argmax(logits, axis=-1))
+
     lat = np.asarray(step_s)
+    storm = np.asarray(storm_s)
     return {
         "batch": batch,
         "tokens": tokens,
+        "paged": bool(block_size),
+        "block_size": block_size,
         "tok_per_s": round(batch * tokens / float(lat.sum()), 2),
         "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
         "p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
@@ -95,6 +127,16 @@ def _serve_cell(sim, batch: int, tokens: int, swap_every: int
         "swap_mean_ms": round(float(np.mean(swap_s)) * 1e3, 3),
         "cache_hits": store.cache.hits,
         "cache_misses": store.cache.misses,
+        "churn": {
+            "steps": churn_steps,
+            "admits": engine.admits - admits0,
+            "retires": engine.retires - retires0,
+            "tok_per_s": round(batch * churn_steps / float(storm.sum()),
+                               2),
+            "p95_ms": round(float(np.percentile(storm, 95)) * 1e3, 3),
+            "block_reuse_rate": round(float(
+                engine.allocator_stats().get("reuse_rate", 0.0)), 4),
+        },
     }
 
 
@@ -115,12 +157,21 @@ def main():
 
     results = []
     for batch in batches:
-        cell = _serve_cell(sim, batch, tokens, swap_every=8)
-        print(f"batch={cell['batch']}: {cell['tok_per_s']} tok/s  "
-              f"p50={cell['p50_ms']}ms p95={cell['p95_ms']}ms  "
-              f"compiles={cell['compile_count']} swaps={cell['swaps']}  "
-              f"cache {cell['cache_hits']}h/{cell['cache_misses']}m")
-        results.append(cell)
+        for block_size in (0, 8):          # dense + paged cell per width
+            cell = _serve_cell(sim, batch, tokens, swap_every=8,
+                               block_size=block_size)
+            ch = cell["churn"]
+            print(f"batch={cell['batch']} "
+                  f"{'paged' if cell['paged'] else 'dense'}: "
+                  f"{cell['tok_per_s']} tok/s  "
+                  f"p50={cell['p50_ms']}ms p95={cell['p95_ms']}ms  "
+                  f"compiles={cell['compile_count']} "
+                  f"swaps={cell['swaps']}  "
+                  f"cache {cell['cache_hits']}h/{cell['cache_misses']}m  "
+                  f"churn {ch['tok_per_s']} tok/s "
+                  f"p95={ch['p95_ms']}ms "
+                  f"reuse={ch['block_reuse_rate']}")
+            results.append(cell)
 
     name = "serve_decode_smoke" if args.smoke else "serve_decode"
     path = save_bench_json(name, {

@@ -4,9 +4,13 @@ Trains a tiny federated fleet for a few rounds (checkpointing each round),
 then serves the TRAINED per-task adapters from the checkpoint through the
 multi-tenant ServeEngine: every lane is a tenant holding a (task, RSU,
 version) adapter at its own rank, all rank-padded into one compiled decode
-program — hot-swapping tenants mid-stream never recompiles.
+program — hot-swapping tenants mid-stream never recompiles. The second
+half of the stream runs continuous batching: tenants retire and new ones
+admit mid-stream through the AdapterStore, sibling lanes undisturbed.
+With --block-size > 0 the KV caches are block-paged (core/kv_blocks.py)
+and retired tenants' blocks recycle to the new admissions.
 
-    PYTHONPATH=src python examples/serve_decode.py --tokens 24
+    PYTHONPATH=src python examples/serve_decode.py --tokens 24 --block-size 8
 """
 import argparse
 import tempfile
@@ -28,6 +32,8 @@ def main():
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="KV block size (> 0 pages the caches; 0 = dense)")
     args = ap.parse_args()
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
@@ -45,7 +51,12 @@ def main():
               f"in {time.time() - t0:.1f}s (checkpoints in {ckpt_dir})")
 
         # -- serve the trained adapters straight from the checkpoint ----
-        spec = ServeSpec(max_batch=args.lanes, cache_len=args.tokens + 8)
+        cache_len = args.tokens + 8
+        if args.block_size:
+            cache_len += (-cache_len) % args.block_size
+        spec = ServeSpec(max_batch=args.lanes, cache_len=cache_len,
+                         block_size=args.block_size,
+                         admission="evict_oldest")
         store = AdapterStore.from_checkpoint(cfg, ckpt_dir, spec=spec)
         # the frozen base weights are reproducible from the config seed —
         # exactly how IoVSimulator builds them
@@ -69,22 +80,32 @@ def main():
         t0 = time.time()
         gen = engine.generate(prompts, args.tokens // 2)
 
-        # hot-swap every lane to a different tenant mid-service: new task,
-        # new rank — same compiled program
+        # continuous batching: retire one tenant mid-service and admit
+        # new ones through the store — sibling lanes keep decoding
+        # bit-undisturbed, the compiled program never changes, and (paged)
+        # the retired lane's KV blocks recycle to the newcomers
+        engine.retire(0)
         for lane in range(engine.max_batch):
             task = (lane + 1) % store.num_tasks
-            paged = store.get(task, rank=ranks[(lane + 1) % len(ranks)])
-            engine.assign(lane, paged)
+            store.admit(engine, task,
+                        rank=ranks[(lane + 1) % len(ranks)], lane=lane)
         gen2 = engine.generate(prompts, args.tokens - args.tokens // 2)
         dt = time.time() - t0
 
         total = gen.shape[1] + gen2.shape[1] + 2 * (prompts.shape[1] - 1)
         print(f"served {engine.max_batch} lanes × {total} steps in "
               f"{dt:.1f}s ({engine.max_batch * total / dt:.1f} tok/s), "
-              f"{engine.swaps} hot swaps, "
+              f"{engine.swaps} hot swaps ({engine.admits} admits / "
+              f"{engine.retires} retires), "
               f"{engine.compile_count} decode compile(s), "
               f"adapter cache {store.cache.hits} hits / "
               f"{store.cache.misses} misses")
+        if engine.paged:
+            stats = engine.allocator_stats()
+            print(f"block pool: {stats['num_blocks']} blocks, "
+                  f"high water {stats['high_water']}, "
+                  f"{stats['recycles']} recycled "
+                  f"(reuse rate {stats['reuse_rate']:.2f})")
         print("sample stream:", np.concatenate([gen[0], gen2[0]])[:16])
 
 

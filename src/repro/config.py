@@ -500,6 +500,16 @@ class ServeSpec:
     server's truncated-SVD depth, which bounds every distributed rank).
     ``cache_capacity`` bounds the host-side adapter cache — entries keyed
     ``(task, rsu, version)`` — not device memory.
+
+    ``block_size > 0`` switches the ring-buffer caches to block-paged KV
+    (``core/kv_blocks.py``): attention caches live in a shared pool of
+    ``max_blocks`` fixed-size blocks behind per-lane block tables, so
+    long streams allocate incrementally and retired tenants' blocks
+    recycle. ``max_blocks=0`` auto-sizes the pool for full occupancy
+    (every lane at full cache length, plus the null block). ``admission``
+    picks the lane for ``ServeEngine.admit`` when the caller names none:
+    ``"strict"`` refuses when every lane is occupied, ``"evict_oldest"``
+    retires the longest-admitted tenant to make room.
     """
     max_batch: int = 4           # concurrent decode lanes (tenants)
     cache_len: int = 128         # per-lane KV/state cache length (tokens)
@@ -507,9 +517,24 @@ class ServeSpec:
     cache_capacity: int = 32     # host adapter-cache entries (LRU-bounded)
     sliding_window: Optional[int] = None   # cap attention window at decode
     donate: bool = True          # donate lane caches into the decode step
+    block_size: int = 0          # paged-KV block size (tokens); 0 ⇒ dense
+    max_blocks: int = 0          # pool size incl. null block; 0 ⇒ auto
+    admission: str = "strict"    # admit() lane policy: strict|evict_oldest
 
     def resolve_max_rank(self, lora: "LoRAConfig") -> int:
         return self.max_rank if self.max_rank > 0 else lora.max_rank
+
+    @property
+    def paged(self) -> bool:
+        return self.block_size > 0
+
+    def resolve_max_blocks(self) -> int:
+        """Pool size: explicit, or full occupancy (+1 for the null block)."""
+        if not self.paged:
+            return 0
+        if self.max_blocks:
+            return self.max_blocks
+        return self.max_batch * (self.cache_len // self.block_size) + 1
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -522,6 +547,22 @@ class ServeSpec:
             raise ValueError("cache_capacity must be >= 1")
         if self.sliding_window is not None and self.sliding_window < 1:
             raise ValueError("sliding_window must be >= 1 or None")
+        if self.block_size < 0:
+            raise ValueError("block_size must be >= 0 (0 = dense caches)")
+        if self.block_size and self.cache_len % self.block_size:
+            raise ValueError(
+                f"cache_len ({self.cache_len}) must be a multiple of "
+                f"block_size ({self.block_size}) — the lane ring is a "
+                "whole number of blocks")
+        if self.max_blocks < 0:
+            raise ValueError("max_blocks must be >= 0 (0 = auto-size)")
+        if self.max_blocks and self.max_blocks < 2:
+            raise ValueError("max_blocks must be >= 2 (null block + at "
+                             "least one usable block)")
+        if self.admission not in ("strict", "evict_oldest"):
+            raise ValueError(
+                f"admission must be 'strict' or 'evict_oldest', "
+                f"got {self.admission!r}")
 
 
 @dataclass(frozen=True)

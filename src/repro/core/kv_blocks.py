@@ -1,0 +1,333 @@
+"""Block-paged KV cache for the serving tier (DESIGN.md §5).
+
+Dense serving gives every lane a full ``cache_len``-token ring buffer up
+front, so a mostly short-stream fleet pays max-seq memory per lane and a
+retired lane's cache is dead weight until the lane is reused. Paged-
+attention-style serving replaces the per-lane ring with a shared pool of
+fixed-size *blocks* (``block_size`` tokens each) plus a per-lane *block
+table* mapping logical block index -> physical pool block:
+
+- long streams allocate blocks incrementally as their position crosses
+  block boundaries, instead of max-seq upfront;
+- a retired lane's blocks return to the free list and recycle to new
+  tenants (the continuous-batching half of the story);
+- the compiled decode program never changes: tables are int32 data of
+  fixed shape, the pool has fixed shape, so admit/retire/grow are pure
+  host-side data movement.
+
+Layout. A per-lane dense ring-buffer cache leaf is ``(L, 1, Sc, *tail)``
+(layer-stacked, dummy batch axis, ring of ``Sc = cache_len`` slots). The
+pool replaces the ring axis with ``(num_blocks, block_size)``:
+``(L, 1, num_blocks, block_size, *tail)``. Logical slot ``s`` of a lane
+lives at ``(table[s // block_size], s % block_size)``. One table row per
+lane is shared by EVERY paged cache in the model (all attention/MLA
+segments and zamba2's shared block page the same way, like vLLM's
+per-layer pools behind one table).
+
+Physical block 0 is the permanent NULL block: never allocated, never
+written, ``pos == -1`` everywhere. Unallocated table entries point at it,
+so gathering a lane's blocks is always in-bounds and the attention mask
+(``kv_positions >= 0``) hides whatever a not-yet-allocated block would
+contribute. Freeing a block stamps its ``pos`` entries back to ``-1``
+(:func:`release_blocks`) so a recycled block can never leak a previous
+tenant's positions — its stale K/V values are unreachable behind the
+mask, and masked lanes contribute exact zeros through the softmax (the
+dense<->paged parity is bit-exact, not approximate; see DESIGN.md §5).
+
+Only ring-buffer caches page. SSM/recurrent state (mamba2, rwkv6) is
+O(1) per lane already and stays a dense vmapped carry.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import BLOCK_ATTN, BLOCK_MLA, ModelConfig
+
+# physical block 0: permanently empty, the target of unallocated table
+# entries — gathers stay in-bounds, the pos == -1 mask does the rest
+NULL_BLOCK = 0
+
+
+class BlockPoolExhausted(RuntimeError):
+    """The block pool has no free blocks left. Raised loudly — silently
+    wrapping into another tenant's blocks would corrupt sibling streams."""
+
+
+# ---------------------------------------------------------------------------
+# Host-side free-list allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` physical blocks.
+
+    Pure host-side bookkeeping: the tables it maintains are plain int32
+    numpy (one row per lane, ``blocks_per_lane`` logical entries, value
+    ``NULL_BLOCK`` = unallocated) that the serve engine ships to the
+    device each step. Invariants (pinned by tests/test_kv_blocks.py):
+
+    - a physical block is owned by at most one (lane, logical) entry at a
+      time — :meth:`ensure` can never double-assign;
+    - conservation: ``free_count + in_use_count == num_blocks - 1`` (the
+      null block is outside the economy) after every operation;
+    - exhaustion raises :class:`BlockPoolExhausted`, it never wraps.
+    """
+
+    def __init__(self, num_blocks: int, num_lanes: int,
+                 blocks_per_lane: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (null block + at least one "
+                f"usable block), got {num_blocks}")
+        if num_lanes < 1 or blocks_per_lane < 1:
+            raise ValueError("num_lanes and blocks_per_lane must be >= 1")
+        self.num_blocks = int(num_blocks)
+        self.num_lanes = int(num_lanes)
+        self.blocks_per_lane = int(blocks_per_lane)
+        self.tables = np.full((num_lanes, blocks_per_lane), NULL_BLOCK,
+                              np.int32)
+        # stack: pop() hands out low ids first (1, 2, ...)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._in_use: set = set()
+        self._ever_used: set = set()
+        self.allocs = 0
+        self.frees = 0
+        self.recycles = 0      # allocations served by a previously-freed block
+        self.oom_events = 0
+        self.high_water = 0
+
+    # -- queries --------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use_count(self) -> int:
+        return len(self._in_use)
+
+    def lane_blocks(self, lane: int) -> List[int]:
+        """Physical blocks currently owned by `lane` (table order)."""
+        row = self.tables[lane]
+        return [int(b) for b in row if b != NULL_BLOCK]
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "num_blocks": self.num_blocks,
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "recycles": self.recycles,
+            "oom_events": self.oom_events,
+            "in_use": self.in_use_count,
+            "free": self.free_count,
+            "high_water": self.high_water,
+            "reuse_rate": (self.recycles / self.allocs
+                           if self.allocs else 0.0),
+        }
+
+    def check(self) -> None:
+        """Assert the structural invariants (cheap; tests call this after
+        every mutation, the engine relies on them silently)."""
+        live = [int(b) for b in self.tables.ravel() if b != NULL_BLOCK]
+        assert len(live) == len(set(live)), "block double-assigned"
+        assert set(live) == self._in_use, "table/in-use set diverged"
+        assert not (self._in_use & set(self._free)), "block both free+used"
+        assert self.free_count + self.in_use_count == self.num_blocks - 1, \
+            "free-list conservation violated"
+        assert NULL_BLOCK not in self._in_use and \
+            NULL_BLOCK not in self._free, "null block entered the economy"
+
+    # -- mutations ------------------------------------------------------
+    def ensure(self, lane: int, logical: int) -> Optional[int]:
+        """Make sure `lane`'s logical block `logical` is backed by a
+        physical block. Returns the physical id if this call allocated a
+        fresh block, None if it was already mapped."""
+        if self.tables[lane, logical] != NULL_BLOCK:
+            return None
+        if not self._free:
+            self.oom_events += 1
+            raise BlockPoolExhausted(
+                f"block pool exhausted: all {self.num_blocks - 1} usable "
+                f"blocks in use (lane {lane} needs logical block "
+                f"{logical}); raise ServeSpec.max_blocks or retire lanes")
+        blk = self._free.pop()
+        assert blk not in self._in_use, "free list handed out a live block"
+        self._in_use.add(blk)
+        if blk in self._ever_used:
+            self.recycles += 1
+        self._ever_used.add(blk)
+        self.tables[lane, logical] = blk
+        self.allocs += 1
+        self.high_water = max(self.high_water, len(self._in_use))
+        return blk
+
+    def free_lane(self, lane: int) -> List[int]:
+        """Release every block `lane` owns back to the free list. Returns
+        the freed physical ids (the engine stamps their pool ``pos`` back
+        to -1 via :func:`release_blocks`)."""
+        freed = self.lane_blocks(lane)
+        for blk in freed:
+            self._in_use.discard(blk)
+            self._free.append(blk)
+            self.frees += 1
+        self.tables[lane] = NULL_BLOCK
+        return freed
+
+    def reset(self) -> List[int]:
+        """Free every lane. Returns all freed physical ids."""
+        freed: List[int] = []
+        for lane in range(self.num_lanes):
+            freed.extend(self.free_lane(lane))
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Cache-tree plumbing: which slots page, pool construction, gather/scatter
+# ---------------------------------------------------------------------------
+
+Slot = Tuple
+
+def paged_slots(cfg: ModelConfig) -> List[Slot]:
+    """Tree addresses of the ring-buffer (position-indexed) caches in
+    ``transformer.init_caches(cfg, ...)`` order: attention/MLA segments
+    plus zamba2's shared block. SSM state segments are excluded — they
+    carry no ``pos`` ring and stay dense."""
+    from repro.models.transformer import segments_of
+    slots: List[Slot] = [("segments", i)
+                         for i, (kind, _) in enumerate(segments_of(cfg))
+                         if kind in (BLOCK_ATTN, BLOCK_MLA)]
+    if cfg.shared_attn_every:
+        slots.append(("shared_attn",))
+    return slots
+
+
+def get_slot(caches: Dict, slot: Slot):
+    return (caches["segments"][slot[1]] if slot[0] == "segments"
+            else caches["shared_attn"])
+
+
+def _set_slot(caches: Dict, slot: Slot, value) -> Dict:
+    out = dict(caches)
+    if slot[0] == "segments":
+        segs = list(out["segments"])
+        segs[slot[1]] = value
+        out["segments"] = segs
+    else:
+        out["shared_attn"] = value
+    return out
+
+
+def split_cache_tree(cfg: ModelConfig, caches: Dict
+                     ) -> Tuple[Dict, List[Dict]]:
+    """Split a cache tree into (state_tree, paged_caches): the state tree
+    keeps SSM segments and holds an EMPTY dict at each paged slot (a
+    leafless pytree node — it vmaps/donates as nothing), paged_caches is
+    the list of ring-buffer cache dicts in :func:`paged_slots` order."""
+    paged = []
+    state = caches
+    for slot in paged_slots(cfg):
+        paged.append(get_slot(state, slot))
+        state = _set_slot(state, slot, {})
+    return state, paged
+
+
+def merge_lane_caches(cfg: ModelConfig, state_caches: Dict,
+                      gathered: Sequence[Dict]) -> Dict:
+    """Inverse of :func:`split_cache_tree` for one lane: drop the gathered
+    dense views back into the paged slots of the state tree."""
+    out = state_caches
+    for slot, g in zip(paged_slots(cfg), gathered):
+        out = _set_slot(out, slot, g)
+    return out
+
+
+def strip_paged(cfg: ModelConfig, caches: Dict) -> Dict:
+    """Replace the paged slots of a full cache tree with empty dicts —
+    what remains is the dense SSM carry."""
+    out = caches
+    for slot in paged_slots(cfg):
+        out = _set_slot(out, slot, {})
+    return out
+
+
+def make_pool(cache: Dict, num_blocks: int, block_size: int) -> Dict:
+    """Build a shared block pool shaped after one lane's dense cache:
+    every leaf ``(L, 1, Sc, *tail)`` becomes ``(L, 1, num_blocks,
+    block_size, *tail)``. ``pos`` starts at -1 everywhere (including the
+    null block), value leaves at zero."""
+    def mk(name, leaf):
+        shape = leaf.shape[:2] + (num_blocks, block_size) + leaf.shape[3:]
+        if name == "pos":
+            return jnp.full(shape, -1, leaf.dtype)
+        return jnp.zeros(shape, leaf.dtype)
+
+    return {name: mk(name, leaf) for name, leaf in cache.items()}
+
+
+def pool_block_size(pool: Dict) -> int:
+    return int(pool["pos"].shape[3])
+
+
+def gather_lane(pool: Dict, table_row: jnp.ndarray) -> Dict:
+    """One lane's dense ring-buffer view of a pool: gather its table's
+    blocks and flatten them back to ``(L, 1, Sc, *tail)``. Unallocated
+    entries read the null block (pos = -1 -> masked)."""
+    T = table_row.shape[0]
+
+    def g(leaf):
+        got = jnp.take(leaf, table_row, axis=2)      # (L, 1, T, bs, *tail)
+        return got.reshape(leaf.shape[:2] + (T * leaf.shape[3],)
+                           + leaf.shape[4:])
+
+    return {name: g(leaf) for name, leaf in pool.items()}
+
+
+def written_slot(dense_cache: Dict, idx) -> Dict:
+    """The single ring slot a decode step just wrote: leaf
+    ``(L, 1, Sc, *tail)`` -> ``(L, 1, *tail)`` at ring index ``idx``
+    (traced scalar — dynamic-slice, shape-stable)."""
+    return {name: jax.lax.dynamic_index_in_dim(leaf, idx, axis=2,
+                                               keepdims=False)
+            for name, leaf in dense_cache.items()}
+
+
+def scatter_written(pool: Dict, written: Dict, tables: jnp.ndarray,
+                    positions: jnp.ndarray, block_size: int) -> Dict:
+    """Write every lane's just-decoded slot back into the pool.
+
+    written: vmap-stacked :func:`written_slot` output, leaves
+    ``(B, L, 1, *tail)``. tables: ``(B, T)`` int32. positions: ``(B,)``
+    absolute per-lane positions of the tokens being written. Destination
+    slots are distinct across lanes (the allocator never double-assigns a
+    block), so the scatter order cannot matter."""
+    T = tables.shape[1]
+    ring = positions % (T * block_size)
+    blk = jnp.take_along_axis(tables, (ring // block_size)[:, None],
+                              axis=1)[:, 0]
+    dest = blk * block_size + (ring % block_size)    # (B,) flat pool slots
+
+    def s(pleaf, wleaf):
+        flat = pleaf.reshape(pleaf.shape[:2]
+                             + (pleaf.shape[2] * pleaf.shape[3],)
+                             + pleaf.shape[4:])
+        upd = jnp.moveaxis(wleaf, 0, 2).astype(pleaf.dtype)  # (L,1,B,*tail)
+        flat = flat.at[:, :, dest].set(upd)
+        return flat.reshape(pleaf.shape)
+
+    return {name: s(pool[name], written[name]) for name in pool}
+
+
+def release_blocks(pool: Dict, block_ids: Sequence[int]) -> Dict:
+    """Host-side retire path: stamp freed physical blocks empty
+    (``pos = -1``) so a tenant that later recycles them can never attend
+    to the previous owner's entries. K/V values are left in place — they
+    are unreachable behind the position mask and masked slots contribute
+    exact zeros through the softmax (DESIGN.md §5 numerics contract)."""
+    if not len(block_ids):
+        return pool
+    ids = np.asarray(block_ids, np.int64)
+    out = dict(pool)
+    out["pos"] = pool["pos"].at[:, :, ids].set(-1)
+    return out

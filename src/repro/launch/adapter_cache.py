@@ -246,3 +246,13 @@ class AdapterStore:
         return PagedAdapter(task=task, rsu=rsu, version=int(version),
                             rank=rank, slot_rank=self.slot_rank,
                             scale=self.lora.scale, adapters=tree)
+
+    def admit(self, engine, task: int, rsu: int = GLOBAL_RSU,
+              rank: Optional[int] = None,
+              version: Optional[int] = None,
+              lane: Optional[int] = None) -> int:
+        """Page the adapter for ``(task, rsu, rank, version)`` out of the
+        store and admit it into ``engine`` mid-stream (continuous
+        batching: lane choice / eviction policy is the engine's). Returns
+        the lane the tenant landed on."""
+        return engine.admit(self.get(task, rsu, rank, version), lane=lane)

@@ -16,6 +16,18 @@ hot-swapping adapters across tenants, tasks, RSUs and ranks never changes
 the program: the decode jit cache holds exactly one entry
 (tests/test_serve.py pins this with a log_compiles guard).
 
+Continuous batching rides on the same contract: ``admit(tenant)`` /
+``retire(lane)`` are pure host-side data movement into the fixed slot
+shape (adapter scatter + cache/allocator surgery on ONE lane), so tenants
+enter and leave mid-stream while sibling lanes' positions, caches and
+greedy streams stay bit-identical to an undisturbed run
+(tests/test_continuous_batching.py). With ``ServeSpec.block_size > 0``
+the ring-buffer KV caches move into a shared block pool behind per-lane
+block tables (``core/kv_blocks.py``): long streams allocate blocks
+incrementally instead of max-seq upfront, and a retired tenant's blocks
+recycle to new admissions — still through the one compiled decode body
+(tables are fixed-shape int32 data, never statics).
+
 CLI example (batched requests on CPU with the reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tokens 32
 """
@@ -30,6 +42,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import LoRAConfig, ModelConfig, ServeSpec
+from repro.core import kv_blocks as kvb
 from repro.core import lora as lora_lib
 from repro.launch import sharding as sh
 from repro.launch.adapter_cache import PagedAdapter
@@ -118,6 +131,12 @@ class ServeEngine:
 
     Unassigned lanes hold zero adapters at zero scale — exact base-model
     decode — so a partially occupied engine is always safe to step.
+
+    With ``spec.block_size > 0`` the engine runs block-paged: ring-buffer
+    caches live in shared pools behind a :class:`~repro.core.kv_blocks.\
+BlockAllocator`, lanes grow block-by-block as their streams lengthen, and
+    ``retire``/``reset_lane`` return blocks to the free list for the next
+    admission. Only SSM/recurrent state stays a per-lane dense carry.
     """
 
     def __init__(self, params, cfg: ModelConfig, lora: LoRAConfig,
@@ -143,44 +162,97 @@ class ServeEngine:
         self._scales = np.zeros(B, np.float32)
         self._cache0 = T.init_caches(cfg, 1, self.spec.cache_len,
                                      dtype=dtype)
-        self._caches = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (B,) + x.shape) + 0, self._cache0)
+        self.paged = self.spec.paged
+        self.allocator: Optional[kvb.BlockAllocator] = None
+        if self.paged:
+            bs = self.spec.block_size
+            blocks_per_lane = self.spec.cache_len // bs
+            num_blocks = self.spec.resolve_max_blocks()
+            self.allocator = kvb.BlockAllocator(num_blocks, B,
+                                                blocks_per_lane)
+            state0, paged0 = kvb.split_cache_tree(cfg, self._cache0)
+            self._state0 = state0
+            self._pools = tuple(kvb.make_pool(c, num_blocks, bs)
+                                for c in paged0)
+            self._caches = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (B,) + x.shape) + 0, state0)
+        else:
+            self._caches = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (B,) + x.shape) + 0,
+                self._cache0)
         self._positions = np.zeros(B, np.int32)
         self.assigned: Dict[int, Optional[PagedAdapter]] = \
             {i: None for i in range(B)}
         self.swaps = 0
+        self.admits = 0
+        self.retires = 0
+        self._admit_order: list = []     # lanes, oldest admission first
 
         window = self.spec.sliding_window
-
-        def lane(params, ad, scale, token, caches, position):
-            logits, nc = T.decode_step(
-                params, ad, cfg, slot_lora, token.reshape(1, 1), caches,
-                position, sliding_window=window, scan_unroll=scan_unroll,
-                scale=scale)
-            return logits[0, 0], nc
-
-        vlane = jax.vmap(lane, in_axes=(None, 0, 0, 0, 0, 0))
-
         self._traces = 0
-
-        def serve_decode(params, adapters, scales, tokens, caches,
-                         positions):
-            # host-side body: runs ONLY when jax (re)traces the program,
-            # so this counter is the number of compiled decode variants
-            self._traces += 1
-            return vlane(params, adapters, scales, tokens, caches,
-                         positions)
-
+        one_dev = jax.sharding.SingleDeviceSharding(jax.devices()[0])
         # Pin explicit input shardings: the jit cache key must not depend
         # on whether an argument is committed (host-side lane surgery —
         # assign/reset_lane scatters — commits the caches/adapters, while
         # fresh init arrays and jit outputs are uncommitted; without the
         # pin the FIRST step after a reset re-lowers the whole program).
-        one_dev = jax.sharding.SingleDeviceSharding(jax.devices()[0])
-        self._decode = jax.jit(
-            serve_decode,
-            in_shardings=(one_dev,) * 6,
-            donate_argnums=(4,) if self.spec.donate else ())
+        if self.paged:
+            def lane(params, pools, ad, scale, token, state, table_row,
+                     position):
+                logits, ns, written = T.decode_step_paged(
+                    params, ad, cfg, slot_lora, token.reshape(1, 1), state,
+                    pools, table_row, position, sliding_window=window,
+                    scan_unroll=scan_unroll, scale=scale)
+                return logits[0, 0], ns, written
+
+            vlane = jax.vmap(lane,
+                             in_axes=(None, None, 0, 0, 0, 0, 0, 0))
+            bs = self.spec.block_size
+
+            def serve_decode_paged(params, adapters, scales, tokens,
+                                   states, pools, tables, positions):
+                # host-side body: runs ONLY when jax (re)traces the
+                # program, so _traces counts compiled decode variants
+                self._traces += 1
+                logits, new_states, written = vlane(
+                    params, pools, adapters, scales, tokens, states,
+                    tables, positions)
+                # pools are unbatched under the lane vmap, so each lane's
+                # just-written ring slot comes back as a value; one
+                # scatter per pool lands them all (destination blocks are
+                # disjoint across lanes — allocator invariant)
+                new_pools = tuple(
+                    kvb.scatter_written(pool, w, tables, positions, bs)
+                    for pool, w in zip(pools, written))
+                return logits, new_states, new_pools
+
+            self._decode = jax.jit(
+                serve_decode_paged,
+                in_shardings=(one_dev,) * 8,
+                donate_argnums=(4, 5) if self.spec.donate else ())
+        else:
+            def lane(params, ad, scale, token, caches, position):
+                logits, nc = T.decode_step(
+                    params, ad, cfg, slot_lora, token.reshape(1, 1),
+                    caches, position, sliding_window=window,
+                    scan_unroll=scan_unroll, scale=scale)
+                return logits[0, 0], nc
+
+            vlane = jax.vmap(lane, in_axes=(None, 0, 0, 0, 0, 0))
+
+            def serve_decode(params, adapters, scales, tokens, caches,
+                             positions):
+                # host-side body: runs ONLY when jax (re)traces the
+                # program, so this counter is the number of compiled
+                # decode variants
+                self._traces += 1
+                return vlane(params, adapters, scales, tokens, caches,
+                             positions)
+
+            self._decode = jax.jit(
+                serve_decode,
+                in_shardings=(one_dev,) * 6,
+                donate_argnums=(4,) if self.spec.donate else ())
 
     # -- tenancy --------------------------------------------------------
     @property
@@ -201,6 +273,9 @@ class ServeEngine:
         self._scales[lane] = paged.scale
         self.assigned[lane] = paged
         self.swaps += 1
+        if lane in self._admit_order:
+            self._admit_order.remove(lane)
+        self._admit_order.append(lane)
         if reset:
             self.reset_lane(lane)
 
@@ -211,25 +286,105 @@ class ServeEngine:
             self._adapters, self._zero_adapter)
         self._scales[lane] = 0.0
         self.assigned[lane] = None
+        if lane in self._admit_order:
+            self._admit_order.remove(lane)
         if reset:
             self.reset_lane(lane)
 
+    def admit(self, paged: PagedAdapter, *,
+              lane: Optional[int] = None) -> int:
+        """Admit a tenant mid-stream: pick a lane (free lane first; under
+        ``spec.admission="evict_oldest"`` retire the longest-admitted
+        tenant when full; ``"strict"`` raises instead) and hot-swap the
+        adapter in. Host-side data movement on that ONE lane — sibling
+        lanes' positions, caches and streams are untouched, and the
+        compiled decode program never changes. Returns the lane."""
+        if lane is None:
+            free = [i for i in range(self.max_batch)
+                    if self.assigned[i] is None]
+            if free:
+                lane = free[0]
+            elif self.spec.admission == "evict_oldest":
+                lane = self.retire(self._admit_order[0])
+            else:
+                raise RuntimeError(
+                    f"no free lane for tenant {paged.key} (all "
+                    f"{self.max_batch} lanes occupied; ServeSpec."
+                    "admission='strict' refuses to evict)")
+        self.assign(lane, paged, reset=True)
+        self.admits += 1
+        return lane
+
+    def retire(self, lane: int) -> int:
+        """Retire `lane`'s tenant: back to base-model decode, stream
+        reset, and (paged mode) its KV blocks recycled to the free list.
+        Sibling lanes are bit-undisturbed. Returns the freed lane."""
+        self.evict(lane, reset=True)
+        self.retires += 1
+        return lane
+
     def reset_lane(self, lane: int) -> None:
-        """Fresh cache + position 0 for `lane` (new request)."""
-        self._caches = jax.tree_util.tree_map(
-            lambda c, z: c.at[lane].set(z.astype(c.dtype)),
-            self._caches, self._cache0)
+        """Fresh cache + position 0 for `lane` (new request). In paged
+        mode this frees the lane's blocks (stamping their pool positions
+        back to -1 so a recycler can never see them) and resets only the
+        dense SSM carry."""
+        if self.paged:
+            freed = self.allocator.free_lane(lane)
+            if freed:
+                self._pools = tuple(kvb.release_blocks(p, freed)
+                                    for p in self._pools)
+            self._caches = jax.tree_util.tree_map(
+                lambda c, z: c.at[lane].set(z.astype(c.dtype)),
+                self._caches, self._state0)
+        else:
+            self._caches = jax.tree_util.tree_map(
+                lambda c, z: c.at[lane].set(z.astype(c.dtype)),
+                self._caches, self._cache0)
         self._positions[lane] = 0
 
+    def lane_cache(self, lane: int):
+        """The lane's dense-equivalent cache tree (host-side view; paged
+        mode gathers the lane's blocks). Test/debug surface — the decode
+        path never materializes this outside the jitted body."""
+        state = jax.tree_util.tree_map(lambda c: c[lane], self._caches)
+        if not self.paged:
+            return state
+        table = jnp.asarray(self.allocator.tables[lane])
+        gathered = [kvb.gather_lane(p, table) for p in self._pools]
+        return kvb.merge_lane_caches(self.cfg, state, gathered)
+
+    def allocator_stats(self) -> Dict[str, Any]:
+        """Block-allocator counters (empty dict when dense)."""
+        return self.allocator.stats() if self.paged else {}
+
     # -- decode ---------------------------------------------------------
+    def _ensure_blocks(self) -> None:
+        """Back every lane's write slot for this step with a physical
+        block. Streams grow one block at a time; a wrapped ring reuses
+        the lane's own blocks (already mapped). Raises
+        :class:`~repro.core.kv_blocks.BlockPoolExhausted` when the pool
+        is out — loudly, never by stealing a sibling's block."""
+        Sc, bs = self.spec.cache_len, self.spec.block_size
+        for lane in range(self.max_batch):
+            self.allocator.ensure(lane,
+                                  (int(self._positions[lane]) % Sc) // bs)
+
     def step(self, tokens: Sequence[int]) -> jnp.ndarray:
         """Decode one token on every lane. tokens: (max_batch,) ints.
         Returns per-lane next-token logits, shape (max_batch, vocab)."""
         toks = jnp.asarray(np.asarray(tokens, np.int32).reshape(
             self.spec.max_batch))
-        logits, self._caches = self._decode(
-            self.params, self._adapters, jnp.asarray(self._scales),
-            toks, self._caches, jnp.asarray(self._positions))
+        if self.paged:
+            self._ensure_blocks()
+            logits, self._caches, self._pools = self._decode(
+                self.params, self._adapters, jnp.asarray(self._scales),
+                toks, self._caches, self._pools,
+                jnp.asarray(self.allocator.tables),
+                jnp.asarray(self._positions))
+        else:
+            logits, self._caches = self._decode(
+                self.params, self._adapters, jnp.asarray(self._scales),
+                toks, self._caches, jnp.asarray(self._positions))
         self._positions += 1
         return logits
 

@@ -580,6 +580,48 @@ def decode_step(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
     return logits, new_caches
 
 
+def decode_step_paged(params, adapters, cfg: ModelConfig, lora: LoRAConfig,
+                      token: jnp.ndarray, state_caches, pools, table_row,
+                      position, *, sliding_window=None, scan_unroll: int = 1,
+                      scale=None) -> Tuple[jnp.ndarray, Any, Tuple]:
+    """One-token decode for a single lane against block-paged KV pools.
+
+    The ring-buffer caches (attention/MLA segments, zamba2's shared
+    block) live in shared pools (`core/kv_blocks.py`); this lane reads
+    them through its block table: gather ``pool[table_row]`` into the
+    dense ``(L, 1, Sc, ...)`` view, run the UNCHANGED :func:`decode_step`
+    on it — so paged decode is bit-identical to dense decode by
+    construction — and hand back the single just-written ring slot per
+    pool (extracted with a dynamic slice at ``position % Sc``). The
+    caller owns the pool write: under the serve engine's lane vmap the
+    pools are unbatched operands, so per-lane writes are returned as
+    values and scattered once, outside the vmap
+    (``kv_blocks.scatter_written``).
+
+    state_caches: the cache tree with paged slots emptied
+    (``kv_blocks.split_cache_tree``) — only SSM/recurrent state remains.
+    pools: tuple of pools in ``kv_blocks.paged_slots(cfg)`` order.
+    table_row: (T,) int32 — this lane's block table.
+
+    Returns (logits (B,1,V), new_state_caches, written) where written is
+    a tuple of per-pool dicts with leaves ``(L, 1, *tail)``.
+    """
+    from repro.core import kv_blocks as kvb
+    gathered = [kvb.gather_lane(pool, table_row) for pool in pools]
+    caches = kvb.merge_lane_caches(cfg, state_caches, gathered)
+    logits, new_caches = decode_step(
+        params, adapters, cfg, lora, token, caches, position,
+        sliding_window=sliding_window, scan_unroll=scan_unroll, scale=scale)
+    if pools:
+        Sc = table_row.shape[0] * kvb.pool_block_size(pools[0])
+        idx = jnp.asarray(position, jnp.int32) % Sc
+        written = tuple(kvb.written_slot(kvb.get_slot(new_caches, slot), idx)
+                        for slot in kvb.paged_slots(cfg))
+    else:
+        written = ()
+    return logits, kvb.strip_paged(cfg, new_caches), written
+
+
 def _decode_segment(kind, seg_p, seg_ad, x, cfg, scale, positions, seg_cache,
                     position, window, scan_unroll=1):
     cache_index = positions[0, 0] % _cache_len(kind, seg_cache)

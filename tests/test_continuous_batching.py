@@ -1,0 +1,383 @@
+"""Continuous-batching + paged-KV invariants (DESIGN.md §5).
+
+The three contracts ISSUE/ROADMAP demand of the serving tier, driven by
+an adversarial admit/retire/re-admit schedule:
+
+1. **Sibling isolation.** `admit`/`retire` are host-side data movement on
+   ONE lane: every undisturbed lane's per-step logits and greedy token
+   stream are bit-identical to a churn-free engine fed the same tokens.
+2. **Paged == dense, bit for bit.** At a fixed slot width, a block-paged
+   engine decodes the exact bits of the dense ring-buffer engine through
+   the whole churn schedule (ring wrap included) — the position mask +
+   exact-zero masked-softmax contract, not an approximate tolerance.
+3. **One compile.** The jitted decode body — dense `serve_decode` and
+   paged `serve_decode_paged` alike — compiles exactly once across the
+   schedule, pinned with the same `jax.log_compiles` capture the training
+   engines use.
+
+Plus the allocator-facing observables: retire→admit recycles blocks
+(stats), pool exhaustion raises loudly mid-step, and `ServeSpec.admission`
+policies behave ("strict" refuses, "evict_oldest" retires the head).
+
+Set ``ALLOCATOR_STATS_DIR`` to dump per-test allocator stats as JSON
+(CI uploads the directory as an artifact when this suite fails).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_config
+from repro.config import LoRAConfig, ServeSpec
+from repro.core import kv_blocks as kvb
+from repro.core import lora as lora_lib
+from repro.core.kv_blocks import BlockPoolExhausted
+from repro.launch.adapter_cache import PagedAdapter
+from repro.launch.serve import ServeEngine
+from repro.models import transformer as T
+
+from test_serve import _count_compiles
+
+MAX_RANK = 8
+CHURN_ARCHS = [
+    pytest.param("qwen2-0.5b", id="qwen2-0.5b"),
+    pytest.param("zamba2-2.7b", id="zamba2-2.7b",
+                 marks=pytest.mark.slow),
+]
+
+
+@pytest.fixture
+def stats_dump(request):
+    """Collect allocator stats into this dict; teardown writes them to
+    $ALLOCATOR_STATS_DIR/<test>.json when the env var is set (CI uploads
+    the directory as a failure artifact)."""
+    entries = {}
+    yield entries
+    out_dir = os.environ.get("ALLOCATOR_STATS_DIR")
+    if out_dir and entries:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = request.node.name.replace("/", "_").replace(":", "_")
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(entries, f, indent=2, sort_keys=True, default=str)
+
+
+def _paged(cfg, lora, rank, seed, slot=MAX_RANK):
+    ads = T.init_adapters(jax.random.PRNGKey(seed), cfg, lora, rank=rank)
+    ads = jax.tree_util.tree_map(lambda x: x + 0.01 * jnp.ones_like(x),
+                                 ads)
+    return PagedAdapter(task=0, rsu=-1, version=0, rank=rank,
+                        slot_rank=slot, scale=lora.scale,
+                        adapters=lora_lib.pad_adapter_tree(ads, slot))
+
+
+def _build(arch, *, lanes=3, cache_len=16, block_size=0, max_blocks=0,
+           admission="strict", seed=0):
+    cfg = reduced_config(arch)
+    lora = LoRAConfig(rank=4, max_rank=MAX_RANK, candidate_ranks=(2, 4, 8))
+    params = T.init_params(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    spec = ServeSpec(max_batch=lanes, cache_len=cache_len,
+                     max_rank=MAX_RANK, block_size=block_size,
+                     max_blocks=max_blocks, admission=admission)
+    return cfg, lora, ServeEngine(params, cfg, lora, spec)
+
+
+def _drive_greedy(eng, events, steps, prompt):
+    """Greedy-decode all lanes in lockstep for `steps`, applying churn
+    `events` (step -> [fn(eng, toks)]) BEFORE that step's decode. Each
+    lane feeds its own argmax back — lanes are independent streams.
+    Returns (per-step logits history, per-lane greedy token streams)."""
+    toks = np.full(eng.max_batch, prompt, np.int64)
+    history, streams = [], [[] for _ in range(eng.max_batch)]
+    for t in range(steps):
+        for fn in events.get(t, ()):
+            fn(eng, toks)
+        logits = eng.step(toks)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        history.append(np.asarray(logits))
+        for lane in range(eng.max_batch):
+            streams[lane].append(int(nxt[lane]))
+        toks = nxt.astype(np.int64)
+    return history, streams
+
+
+def _churn_events(cfg, lora, churn_lane, prompt):
+    """Adversarial schedule on ONE lane: admit mid-stream, retire, re-admit
+    at a different rank, then an immediate retire+re-admit at a third rank
+    (the same-step case). Covers ranks 2/4/8 on the churned lane."""
+    def admit(rank, seed):
+        def fn(eng, toks):
+            eng.admit(_paged(cfg, lora, rank, seed), lane=churn_lane)
+            toks[churn_lane] = prompt           # churned stream restarts
+        return fn
+
+    def retire(eng, toks):
+        eng.retire(churn_lane)
+        toks[churn_lane] = prompt
+
+    return {3: [admit(2, 11)],
+            7: [retire],
+            10: [admit(4, 12)],
+            14: [retire, admit(8, 13)]}
+
+
+# ---------------------------------------------------------------------------
+# 1. Sibling-lane isolation under churn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", CHURN_ARCHS)
+def test_sibling_lanes_bit_identical_under_churn(arch):
+    """Lanes 0/1 hold tenants (ranks 4 and 8) throughout; lane 2 churns
+    through admit/retire/re-admit. Every step's logits AND the greedy
+    streams on lanes 0/1 must bit-equal an engine that never churned."""
+    steps, prompt = 20, 1
+    cfg, lora, churn = _build(arch)
+    _, _, quiet = _build(arch)
+    for eng in (churn, quiet):
+        eng.assign(0, _paged(cfg, lora, 4, seed=1))
+        eng.assign(1, _paged(cfg, lora, 8, seed=2))
+    hist_c, streams_c = _drive_greedy(
+        churn, _churn_events(cfg, lora, churn_lane=2, prompt=prompt),
+        steps, prompt)
+    hist_q, streams_q = _drive_greedy(quiet, {}, steps, prompt)
+    for lane in (0, 1):
+        assert streams_c[lane] == streams_q[lane], f"lane {lane} stream"
+        for t in range(steps):
+            np.testing.assert_array_equal(
+                hist_c[t][lane], hist_q[t][lane],
+                err_msg=f"lane {lane} logits diverged at step {t}")
+    assert churn.admits == 3 and churn.retires == 2
+
+
+# ---------------------------------------------------------------------------
+# 2. Paged == dense parity through the same churn schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", CHURN_ARCHS)
+def test_paged_equals_dense_through_churn(arch, stats_dump):
+    """A block-paged engine (block_size 4, ring wraps at step 16) decodes
+    bit-identically to the dense engine through the full churn schedule,
+    on every lane at every step — and retire→admit recycling is visible
+    in the allocator stats."""
+    steps, prompt = 20, 1
+    cfg, lora, dense = _build(arch)
+    _, _, paged = _build(arch, block_size=4)
+    for eng in (dense, paged):
+        eng.assign(0, _paged(cfg, lora, 4, seed=1))
+        eng.assign(1, _paged(cfg, lora, 8, seed=2))
+    events_d = _churn_events(cfg, lora, churn_lane=2, prompt=prompt)
+    events_p = _churn_events(cfg, lora, churn_lane=2, prompt=prompt)
+    hist_d, streams_d = _drive_greedy(dense, events_d, steps, prompt)
+    hist_p, streams_p = _drive_greedy(paged, events_p, steps, prompt)
+    stats_dump["paged_vs_dense"] = paged.allocator_stats()
+    assert streams_p == streams_d
+    for t in range(steps):
+        np.testing.assert_array_equal(
+            hist_p[t], hist_d[t],
+            err_msg=f"paged != dense at step {t}")
+    stats = paged.allocator_stats()
+    assert stats["recycles"] > 0, "retire→admit never recycled a block"
+    assert stats["oom_events"] == 0
+    paged.allocator.check()
+    # Every lane's cache view matches the dense engine's on all LIVE
+    # entries: positions bit-equal, K/V bit-equal wherever pos >= 0. An
+    # empty slot differs by design — dense resets zero the ring, paged
+    # recycling leaves stale values behind the pos mask (the numerics
+    # contract makes them bit-invisible to decode, as asserted above).
+    for lane in range(3):
+        state_p, rings_p = kvb.split_cache_tree(cfg, paged.lane_cache(lane))
+        state_d, rings_d = kvb.split_cache_tree(cfg, dense.lane_cache(lane))
+        assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+            lambda a, b: bool(jnp.array_equal(a, b)), state_p, state_d)), \
+            f"lane {lane} SSM state"
+        for rp, rd in zip(rings_p, rings_d):
+            np.testing.assert_array_equal(
+                np.asarray(rp["pos"]), np.asarray(rd["pos"]),
+                err_msg=f"lane {lane} positions")
+            live = np.asarray(rp["pos"]) >= 0
+            for name in rp:
+                if name == "pos":
+                    continue
+                m = live.reshape(live.shape
+                                 + (1,) * (rp[name].ndim - live.ndim))
+                np.testing.assert_array_equal(
+                    np.where(m, np.asarray(rp[name]), 0),
+                    np.where(m, np.asarray(rd[name]), 0),
+                    err_msg=f"lane {lane} live {name} entries")
+
+
+# ---------------------------------------------------------------------------
+# 3. One compiled decode body across the whole schedule
+# ---------------------------------------------------------------------------
+
+def test_one_compile_through_churn_dense():
+    cfg, lora, eng = _build("qwen2-0.5b")
+
+    def body():
+        eng.assign(0, _paged(cfg, lora, 4, seed=1))
+        eng.assign(1, _paged(cfg, lora, 8, seed=2))
+        _drive_greedy(eng, _churn_events(cfg, lora, 2, 1), 20, 1)
+        jax.block_until_ready(eng.step(np.ones(3, np.int64)))
+
+    compiles = _count_compiles(
+        "Finished XLA compilation of jit(serve_decode)", body)
+    assert len(compiles) == 1, compiles
+    assert eng.compile_count == 1
+
+
+def test_one_compile_through_churn_paged(stats_dump):
+    """Admit/retire/re-admit, block growth, ring wrap, block recycling —
+    none of it may retrace the paged decode program."""
+    cfg, lora, eng = _build("qwen2-0.5b", block_size=4)
+
+    def body():
+        eng.assign(0, _paged(cfg, lora, 4, seed=1))
+        eng.assign(1, _paged(cfg, lora, 8, seed=2))
+        _drive_greedy(eng, _churn_events(cfg, lora, 2, 1), 20, 1)
+        jax.block_until_ready(eng.step(np.ones(3, np.int64)))
+
+    compiles = _count_compiles(
+        "Finished XLA compilation of jit(serve_decode_paged)", body)
+    stats_dump["one_compile_paged"] = eng.allocator_stats()
+    assert len(compiles) == 1, compiles
+    assert eng.compile_count == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission policy + loud exhaustion
+# ---------------------------------------------------------------------------
+
+def test_admission_strict_refuses_when_full():
+    cfg, lora, eng = _build("qwen2-0.5b", lanes=2, admission="strict")
+    eng.admit(_paged(cfg, lora, 2, seed=1))
+    eng.admit(_paged(cfg, lora, 4, seed=2))
+    with pytest.raises(RuntimeError, match="no free lane"):
+        eng.admit(_paged(cfg, lora, 8, seed=3))
+    # explicit lane override still works (caller-managed eviction)
+    assert eng.admit(_paged(cfg, lora, 8, seed=3), lane=1) == 1
+
+
+def test_admission_evict_oldest_retires_the_head():
+    cfg, lora, eng = _build("qwen2-0.5b", lanes=2,
+                            admission="evict_oldest")
+    l0 = eng.admit(_paged(cfg, lora, 2, seed=1))
+    l1 = eng.admit(_paged(cfg, lora, 4, seed=2))
+    assert (l0, l1) == (0, 1)
+    # full: the OLDEST admission (lane 0) is retired for the newcomer
+    l2 = eng.admit(_paged(cfg, lora, 8, seed=3))
+    assert l2 == 0 and eng.retires == 1
+    assert eng.assigned[0].rank == 8 and eng.assigned[1].rank == 4
+    # and now lane 1 is the oldest
+    assert eng.admit(_paged(cfg, lora, 2, seed=4)) == 1
+
+
+def test_block_pool_exhaustion_raises_mid_step(stats_dump):
+    """An undersized pool fails LOUDLY (BlockPoolExhausted) the moment a
+    stream outgrows it — never by silently stealing a sibling's block."""
+    cfg, lora, eng = _build("qwen2-0.5b", lanes=2, cache_len=8,
+                            block_size=4, max_blocks=4)  # 3 usable blocks
+    eng.assign(0, _paged(cfg, lora, 4, seed=1))
+    eng.assign(1, _paged(cfg, lora, 8, seed=2))
+    toks = np.ones(2, np.int64)
+    for _ in range(4):                 # one block per lane: fits
+        eng.step(toks)
+    with pytest.raises(BlockPoolExhausted):
+        eng.step(toks)                 # both lanes grow; only ONE block left
+    stats_dump["exhaustion"] = eng.allocator_stats()
+    assert eng.allocator_stats()["oom_events"] == 1
+    # retiring a lane un-wedges the pool
+    eng.retire(1)
+    eng.step(toks)
+    assert eng.allocator_stats()["recycles"] >= 1
+
+
+def test_reset_lane_returns_blocks_to_the_pool(stats_dump):
+    cfg, lora, eng = _build("qwen2-0.5b", lanes=2, cache_len=8,
+                            block_size=4)
+    eng.assign(0, _paged(cfg, lora, 4, seed=1))
+    toks = np.ones(2, np.int64)
+    for _ in range(6):
+        eng.step(toks)
+    assert eng.allocator.in_use_count == 4       # 2 blocks × 2 lanes
+    eng.reset_lane(0)
+    stats_dump["reset_lane"] = eng.allocator_stats()
+    assert eng.allocator.in_use_count == 2
+    assert eng.allocator.lane_blocks(0) == []
+    eng.allocator.check()
+    # the freed blocks read as empty through the lane's table
+    got = eng.lane_cache(0)
+    pos_leaves = [leaf for path, leaf in
+                  jax.tree_util.tree_leaves_with_path(got)
+                  if "pos" in jax.tree_util.keystr(path)]
+    assert pos_leaves and all(bool(jnp.all(p == -1)) for p in pos_leaves)
+
+
+# ---------------------------------------------------------------------------
+# Store-driven admission: train → checkpoint → serve churn, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_store_driven_churn_end_to_end(tmp_path, stats_dump):
+    """The full bridge under churn: train a tiny fleet, checkpoint it,
+    rebuild an AdapterStore from the checkpoint, then admit/retire REAL
+    trained tenants through a paged engine — paged==dense parity and the
+    one-compile contract must survive the whole pipeline."""
+    from repro.checkpoint.carry import save_checkpoint
+    from repro.launch.adapter_cache import AdapterStore
+    from repro.sim.simulator import IoVSimulator, SimConfig
+
+    lora = LoRAConfig(rank=4, max_rank=MAX_RANK, candidate_ranks=(2, 4, 8))
+    sim_cfg = SimConfig(method="ours", num_tasks=2, num_vehicles=4,
+                        rounds=1, local_steps=1, lora=lora, seed=0)
+    sim = IoVSimulator(sim_cfg)
+    sim.run()
+    save_checkpoint(sim, ckpt_dir=str(tmp_path))
+
+    store = AdapterStore.from_checkpoint(
+        sim_cfg, str(tmp_path),
+        spec=ServeSpec(max_batch=2, cache_len=8, max_rank=MAX_RANK))
+    params = T.init_params(jax.random.PRNGKey(sim_cfg.seed), sim.model_cfg,
+                           jnp.float32)
+
+    def build(block_size):
+        return ServeEngine(
+            params, sim.model_cfg, lora,
+            ServeSpec(max_batch=2, cache_len=8, max_rank=MAX_RANK,
+                      block_size=block_size, admission="evict_oldest"))
+
+    def churn(eng):
+        """store.admit drives the engine: trained tenants in, out, back."""
+        toks = np.ones(2, np.int64)
+        out = []
+        lane = store.admit(eng, task=0, rank=4)
+        store.admit(eng, task=1, rank=2, lane=1 - lane)
+        for _ in range(5):
+            out.append(np.asarray(eng.step(toks)))
+        eng.retire(lane)
+        store.admit(eng, task=1, rank=8)     # recycles the lane's blocks
+        for _ in range(5):
+            out.append(np.asarray(eng.step(toks)))
+        store.admit(eng, task=0, rank=2)     # full → evicts the oldest
+        for _ in range(3):
+            out.append(np.asarray(eng.step(toks)))
+        return out
+
+    paged = build(block_size=4)
+    compiles = _count_compiles(
+        "Finished XLA compilation of jit(serve_decode_paged)",
+        lambda: jax.block_until_ready(churn(paged)[-1]))
+    assert len(compiles) == 1, compiles
+    stats_dump["end_to_end"] = paged.allocator_stats()
+    assert paged.allocator_stats()["recycles"] > 0
+    paged.allocator.check()
+
+    # the identical tenant schedule on dense and paged engines decodes
+    # the same bits (deterministic lane choices: both run evict_oldest)
+    out_d = churn(build(block_size=0))
+    out_p = churn(build(block_size=4))
+    assert len(out_d) == len(out_p) == 13
+    for t, (a, b) in enumerate(zip(out_p, out_d)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"paged != dense at step {t}")

@@ -1,0 +1,324 @@
+"""Block-paged KV cache contracts (core/kv_blocks.py, DESIGN.md §5).
+
+Two layers:
+
+1. The host-side :class:`BlockAllocator` is model-checked against a
+   pure-Python reference under random ensure/free_lane/reset sequences —
+   no block is ever double-assigned, the free list conserves blocks
+   (``free + in_use == num_blocks - 1``; the null block sits outside the
+   economy), and exhaustion raises :class:`BlockPoolExhausted` loudly
+   instead of wrapping into a sibling's blocks. Deterministic twins keep
+   the invariants pinned when hypothesis is unavailable.
+2. The pool plumbing (make_pool / gather_lane / scatter_written /
+   release_blocks) round-trips against a dense numpy ring-buffer
+   reference, and :func:`paged_slots` pages exactly the position-indexed
+   caches (attention/MLA + zamba2's shared block — never SSM state).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_config
+from repro.config import BLOCK_ATTN, BLOCK_MLA
+from repro.core import kv_blocks as kvb
+from repro.core.kv_blocks import (BlockAllocator, BlockPoolExhausted,
+                                  NULL_BLOCK)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYP = False
+
+    class _Stub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Stub()
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+FAST = dict(max_examples=80, deadline=None)
+hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python reference model
+# ---------------------------------------------------------------------------
+
+class RefAllocator:
+    """Straight-line re-statement of the allocator contract: a LIFO free
+    list over blocks 1..num_blocks-1, tables of NULL_BLOCK-initialised
+    entries, ensure() maps exactly one fresh block per unmapped entry."""
+
+    def __init__(self, num_blocks, num_lanes, blocks_per_lane):
+        self.tables = np.full((num_lanes, blocks_per_lane), NULL_BLOCK,
+                              np.int32)
+        self.free = list(range(num_blocks - 1, 0, -1))
+        self.num_blocks = num_blocks
+
+    def ensure(self, lane, logical):
+        if self.tables[lane, logical] != NULL_BLOCK:
+            return None
+        if not self.free:
+            raise BlockPoolExhausted("ref: pool exhausted")
+        blk = self.free.pop()
+        self.tables[lane, logical] = blk
+        return blk
+
+    def free_lane(self, lane):
+        freed = [int(b) for b in self.tables[lane] if b != NULL_BLOCK]
+        self.free.extend(freed)
+        self.tables[lane] = NULL_BLOCK
+        return freed
+
+    def reset(self):
+        out = []
+        for lane in range(self.tables.shape[0]):
+            out.extend(self.free_lane(lane))
+        return out
+
+
+def _apply(op, real, ref):
+    """Apply one op to both allocators; both must agree on success,
+    return value, and OOM."""
+    kind = op[0]
+    if kind == "ensure":
+        _, lane, logical = op
+        try:
+            want = ref.ensure(lane, logical)
+        except BlockPoolExhausted:
+            with pytest.raises(BlockPoolExhausted):
+                real.ensure(lane, logical)
+            return
+        assert real.ensure(lane, logical) == want
+    elif kind == "free":
+        assert real.free_lane(op[1]) == ref.free_lane(op[1])
+    else:
+        assert real.reset() == ref.reset()
+
+
+_geometry = st.tuples(st.integers(2, 12),    # num_blocks
+                      st.integers(1, 4),     # num_lanes
+                      st.integers(1, 4))     # blocks_per_lane
+
+
+def _ops(num_lanes, blocks_per_lane):
+    ensure = st.tuples(st.just("ensure"),
+                       st.integers(0, num_lanes - 1),
+                       st.integers(0, blocks_per_lane - 1))
+    free = st.tuples(st.just("free"), st.integers(0, num_lanes - 1))
+    reset = st.tuples(st.just("reset"))
+    return st.lists(st.one_of(ensure, free, reset), max_size=60)
+
+
+@hyp
+@settings(**FAST)
+@given(data=st.data())
+def test_allocator_model_check(data):
+    nb, nl, bpl = data.draw(_geometry)
+    real = BlockAllocator(nb, nl, bpl)
+    ref = RefAllocator(nb, nl, bpl)
+    for op in data.draw(_ops(nl, bpl)):
+        _apply(op, real, ref)
+        np.testing.assert_array_equal(real.tables, ref.tables)
+        assert sorted(real._free) == sorted(ref.free)
+        real.check()                  # conservation + no-double-assign
+
+
+def test_allocator_model_check_deterministic():
+    """Twin of the hypothesis property: a fixed adversarial schedule that
+    exercises alloc, interleaved frees, reset, recycling and OOM."""
+    real = BlockAllocator(5, 2, 3)    # 4 usable blocks, 6 table entries
+    ref = RefAllocator(5, 2, 3)
+    schedule = [("ensure", 0, 0), ("ensure", 0, 0),   # idempotent re-map
+                ("ensure", 1, 0), ("ensure", 0, 1), ("ensure", 1, 2),
+                ("ensure", 1, 1),                     # pool now full -> OOM
+                ("free", 0), ("ensure", 1, 1),        # recycle lane 0's
+                ("reset",), ("ensure", 0, 2), ("free", 1), ("free", 1)]
+    for op in schedule:
+        _apply(op, real, ref)
+        np.testing.assert_array_equal(real.tables, ref.tables)
+        assert sorted(real._free) == sorted(ref.free)
+        real.check()
+
+
+# ---------------------------------------------------------------------------
+# Allocator unit contracts
+# ---------------------------------------------------------------------------
+
+def test_allocator_never_hands_out_null_block():
+    a = BlockAllocator(4, 1, 3)
+    got = [a.ensure(0, i) for i in range(3)]
+    assert NULL_BLOCK not in got
+    assert sorted(got) == [1, 2, 3]   # low ids first
+
+
+def test_allocator_oom_raises_and_counts():
+    a = BlockAllocator(2, 2, 2)       # exactly ONE usable block
+    assert a.ensure(0, 0) == 1
+    with pytest.raises(BlockPoolExhausted):
+        a.ensure(1, 0)
+    assert a.oom_events == 1
+    a.check()                         # OOM must not corrupt state
+    # freeing un-wedges it
+    a.free_lane(0)
+    assert a.ensure(1, 0) == 1
+    assert a.recycles == 1
+
+
+def test_allocator_free_then_realloc_recycles():
+    a = BlockAllocator(6, 2, 2)
+    a.ensure(0, 0), a.ensure(0, 1)
+    freed = a.free_lane(0)
+    assert sorted(freed) == [1, 2]
+    assert a.frees == 2
+    # LIFO free list: the recycled blocks come back before fresh ones
+    b1 = a.ensure(1, 0)
+    b2 = a.ensure(1, 1)
+    assert {b1, b2} == {1, 2}
+    assert a.recycles == 2
+    assert a.stats()["reuse_rate"] == pytest.approx(0.5)
+    a.check()
+
+
+def test_allocator_conservation_after_every_op():
+    a = BlockAllocator(7, 3, 2)
+    for lane in range(3):
+        for logical in range(2):
+            a.ensure(lane, logical)
+            assert a.free_count + a.in_use_count == 6
+            a.check()
+    assert a.high_water == 6
+    a.reset()
+    assert a.free_count == 6 and a.in_use_count == 0
+    a.check()
+
+
+def test_allocator_rejects_degenerate_geometry():
+    with pytest.raises(ValueError):
+        BlockAllocator(1, 1, 1)       # no usable block beside null
+    with pytest.raises(ValueError):
+        BlockAllocator(4, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Pool plumbing vs a dense numpy reference
+# ---------------------------------------------------------------------------
+
+L, SC, BS, TAIL = 2, 8, 4, (3,)      # 2 layers, ring of 8, 2 blocks/lane
+
+
+def _fake_dense_cache(seed=0):
+    """A minimal attention-style per-lane cache: k/v rings + pos."""
+    rng = np.random.default_rng(seed)
+    return {
+        "k": jnp.asarray(rng.normal(size=(L, 1, SC) + TAIL), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(L, 1, SC) + TAIL), jnp.float32),
+        "pos": jnp.full((L, 1, SC), -1, jnp.int32),
+    }
+
+
+def test_make_pool_shapes_and_null_block():
+    pool = kvb.make_pool(_fake_dense_cache(), num_blocks=5, block_size=BS)
+    assert pool["k"].shape == (L, 1, 5, BS) + TAIL
+    assert pool["pos"].shape == (L, 1, 5, BS)
+    assert bool(jnp.all(pool["pos"] == -1))
+    assert bool(jnp.all(pool["k"] == 0))
+    assert kvb.pool_block_size(pool) == BS
+
+
+def test_gather_scatter_roundtrip_matches_dense_ring():
+    """Stream tokens through two lanes via allocator + scatter_written;
+    gathering a lane back must bit-equal a dense numpy ring buffer."""
+    nb, lanes, T = 6, 2, SC // BS
+    alloc = BlockAllocator(nb, lanes, T)
+    pool = kvb.make_pool(_fake_dense_cache(), nb, BS)
+    dense_ref = {lane: {k: np.array(v) for k, v in
+                        _fake_dense_cache().items()} for lane in range(lanes)}
+    rng = np.random.default_rng(1)
+    positions = np.zeros(lanes, np.int64)
+    for step in range(SC + 3):                      # wrap the ring
+        # per-lane "decode writes": fresh k/v at ring slot pos % SC
+        written = {
+            "k": jnp.asarray(rng.normal(size=(lanes, L, 1) + TAIL),
+                             jnp.float32),
+            "v": jnp.asarray(rng.normal(size=(lanes, L, 1) + TAIL),
+                             jnp.float32),
+            "pos": jnp.asarray(
+                np.broadcast_to(positions[:, None, None],
+                                (lanes, L, 1)).copy(), jnp.int32),
+        }
+        for lane in range(lanes):
+            alloc.ensure(lane, (int(positions[lane]) % SC) // BS)
+            slot = int(positions[lane]) % SC
+            for name in ("k", "v", "pos"):
+                dense_ref[lane][name][:, :, slot] = np.asarray(
+                    written[name][lane])
+        pool = kvb.scatter_written(pool, written,
+                                   jnp.asarray(alloc.tables),
+                                   jnp.asarray(positions, jnp.int32), BS)
+        positions += 1
+    for lane in range(lanes):
+        got = kvb.gather_lane(pool, jnp.asarray(alloc.tables[lane]))
+        for name in ("k", "v", "pos"):
+            np.testing.assert_array_equal(np.asarray(got[name]),
+                                          dense_ref[lane][name],
+                                          err_msg=f"lane {lane} {name}")
+
+
+def test_gather_unallocated_entries_read_null_block():
+    nb, T = 4, SC // BS
+    alloc = BlockAllocator(nb, 1, T)
+    pool = kvb.make_pool(_fake_dense_cache(), nb, BS)
+    alloc.ensure(0, 0)                # only the FIRST logical block
+    got = kvb.gather_lane(pool, jnp.asarray(alloc.tables[0]))
+    assert got["pos"].shape == (L, 1, SC)
+    # the unbacked half of the ring reads the null block: pos == -1
+    assert bool(jnp.all(got["pos"][:, :, BS:] == -1))
+
+
+def test_release_blocks_stamps_only_freed_blocks():
+    nb = 5
+    pool = kvb.make_pool(_fake_dense_cache(), nb, BS)
+    live = pool["pos"].at[:, :, 1:].set(7)       # blocks 1..4 "written"
+    pool = dict(pool, pos=live)
+    out = kvb.release_blocks(pool, [2, 3])
+    assert bool(jnp.all(out["pos"][:, :, [2, 3]] == -1))
+    assert bool(jnp.all(out["pos"][:, :, [1, 4]] == 7))
+    assert out["k"] is pool["k"]                 # values untouched
+    assert kvb.release_blocks(pool, []) is pool  # no-op fast path
+
+
+# ---------------------------------------------------------------------------
+# paged_slots: exactly the position-indexed caches page
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "zamba2-2.7b"])
+def test_paged_slots_cover_ring_caches_only(arch):
+    from repro.models.transformer import init_caches, segments_of
+    cfg = reduced_config(arch)
+    slots = kvb.paged_slots(cfg)
+    kinds = [kind for kind, _ in segments_of(cfg)]
+    want_seg = [i for i, kind in enumerate(kinds)
+                if kind in (BLOCK_ATTN, BLOCK_MLA)]
+    assert [s[1] for s in slots if s[0] == "segments"] == want_seg
+    assert (("shared_attn",) in slots) == bool(cfg.shared_attn_every)
+    # every paged slot has a pos ring; every split-off state slot has none
+    caches = init_caches(cfg, 1, SC, dtype=jnp.float32)
+    state, paged = kvb.split_cache_tree(cfg, caches)
+    assert len(paged) == len(slots)
+    for p in paged:
+        assert "pos" in p and p["pos"].shape[2] == SC
+    for leaf_path, leaf in jax.tree_util.tree_leaves_with_path(state):
+        assert "pos" not in jax.tree_util.keystr(leaf_path)
+    # split/merge round-trips the full tree
+    merged = kvb.merge_lane_caches(cfg, state, paged)
+    assert (jax.tree_util.tree_structure(merged)
+            == jax.tree_util.tree_structure(caches))

@@ -423,3 +423,28 @@ def test_reset_lane_restarts_stream(rng_key, lora_cfg):
     again = np.asarray(eng.step(np.asarray([5, 5])))
     assert np.array_equal(first[0], again[0])     # lane 0 restarted
     assert not np.array_equal(first[1], again[1])  # lane 1 advanced
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_reset_lane_actually_clears_kv_cache(arch, rng_key, lora_cfg):
+    """The coverage gap behind test_reset_lane_restarts_stream: matching
+    logits only prove the FIRST post-reset step ignores stale entries —
+    here the reset lane's cache tree itself must bit-equal a fresh
+    ``init_caches`` (KV/state zeroed, positions back to -1), while the
+    sibling lane's cache keeps its decoded entries."""
+    cfg = reduced_config(arch)
+    params = T.init_params(rng_key, cfg, dtype=jnp.float32)
+    eng = ServeEngine(params, cfg, lora_cfg,
+                      ServeSpec(max_batch=2, cache_len=8))
+    for lane in range(2):
+        eng.assign(lane, _paged(cfg, lora_cfg, 4, seed=80 + lane))
+    for t in range(3):
+        eng.step(np.asarray([5 + t, 5 + t]))
+    fresh = T.init_caches(cfg, 1, 8, dtype=jnp.float32)
+    assert not _tree_bitexact(eng.lane_cache(0), fresh)  # really decoded
+    eng.reset_lane(0)
+    assert _tree_bitexact(eng.lane_cache(0), fresh), \
+        "reset lane still holds stale KV/state entries"
+    assert not _tree_bitexact(eng.lane_cache(1), fresh), \
+        "reset_lane(0) clobbered the sibling lane's cache"
+    assert eng._positions[0] == 0 and eng._positions[1] == 3
